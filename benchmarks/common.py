@@ -1,0 +1,80 @@
+"""Shared benchmark plumbing: tables, CSV artifacts, claim checks.
+
+Every figure module exposes ``run(fast=False) -> list[dict]`` returning one
+row per (config x model) point and a ``CLAIMS`` list of
+:class:`Claim` closures evaluated over those rows.  ``benchmarks.run``
+drives all figures, prints the tables, writes ``artifacts/bench/*.csv``,
+and summarizes the paper-claim validation.
+
+Scale note: the paper runs up to 16 nodes x 12 procs with 10 x 8MB
+accesses per proc (~15 GB of real buffered bytes at peak).  The container
+has ~33 GB RAM shared with the dry-run sweep, so LARGE-access runs use a
+reduced (procs, ops) grid — the DES prices per-byte time identically, and
+every read is still verified byte-for-byte.  SMALL-access runs use the
+paper's full 12 procs/node.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "bench")
+
+KB = 1024
+MB = 1024 * 1024
+
+
+def save_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.abspath(os.path.join(ARTIFACT_DIR, f"{name}.csv"))
+    if not rows:
+        return path
+    keys = list(rows[0].keys())
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def fmt_bw(bps: float) -> str:
+    if bps >= 1e9:
+        return f"{bps/1e9:7.2f} GB/s"
+    return f"{bps/1e6:7.1f} MB/s"
+
+
+def print_table(title: str, rows: List[Dict], cols: Sequence[str]) -> None:
+    print(f"\n### {title}")
+    widths = {c: max(len(c), *(len(str(r.get(c, ''))) for r in rows))
+              for c in cols}
+    print("  " + " | ".join(c.ljust(widths[c]) for c in cols))
+    print("  " + "-+-".join("-" * widths[c] for c in cols))
+    for r in rows:
+        print("  " + " | ".join(str(r.get(c, "")).ljust(widths[c])
+                                for c in cols))
+
+
+@dataclass
+class Claim:
+    """One paper claim checked against measured rows."""
+
+    text: str
+    check: Callable[[List[Dict]], bool]
+
+    def evaluate(self, rows: List[Dict]) -> bool:
+        try:
+            return bool(self.check(rows))
+        except Exception as e:  # a failed lookup is a failed claim
+            print(f"  claim error ({self.text}): {e}")
+            return False
+
+
+def pick(rows: List[Dict], **kv) -> Dict:
+    for r in rows:
+        if all(r.get(k) == v for k, v in kv.items()):
+            return r
+    raise KeyError(kv)

@@ -1,0 +1,80 @@
+"""Paper Fig. 3 — write bandwidth of CN-W and SN-W, 8MB and 8KB accesses.
+
+Claims reproduced (paper §6.1.1):
+ 1. contiguous vs. strided N-1 writes perform the SAME (burst buffering
+    converts both to N-N contiguous),
+ 2. session == commit for write-only workloads (empty file: session_open
+    is a no-op query; session_close == commit),
+ 3. 8MB writes reach peak SSD bandwidth (1 GB/s x write nodes) under both
+    models; 8KB writes cannot saturate the device.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import KB, MB, Claim, pick
+from repro.io.workloads import cn_w, sn_w, run_workload
+
+NODES = (2, 4, 8, 16)
+PEAK_SSD_W = 1.0e9  # B/s per node (paper: Intel 910)
+
+
+def run(fast: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    nodes = NODES[:2] if fast else NODES
+    for s, label, p, m in ((8 * KB, "8KB", 12, 10), (8 * MB, "8MB", 4, 4)):
+        for n in nodes:
+            for model in ("commit", "session"):
+                for factory, name in ((cn_w, "CN-W"), (sn_w, "SN-W")):
+                    cfg = factory(n, s, model, p=p, m=m)
+                    res = run_workload(cfg)
+                    bw = res.write_bandwidth
+                    rows.append({
+                        "workload": name, "access": label, "nodes": n,
+                        "model": model, "write_bw": round(bw),
+                        "bw_per_node": round(bw / n),
+                        "frac_peak": round(bw / (PEAK_SSD_W * n), 3),
+                        "rpc_attach": res.rpc_counts["attach"],
+                        "rpc_query": res.rpc_counts["query"],
+                        "verified": res.verified_reads,
+                    })
+    return rows
+
+
+def _close(a: float, b: float, tol: float) -> bool:
+    return abs(a - b) <= tol * max(a, b)
+
+
+CLAIMS = [
+    Claim(
+        "CN-W == SN-W within 10% (pattern-independent writes; Fig 3)",
+        lambda rows: all(
+            _close(pick(rows, workload="CN-W", access=a, nodes=n,
+                        model=m)["write_bw"],
+                   pick(rows, workload="SN-W", access=a, nodes=n,
+                        model=m)["write_bw"], 0.10)
+            for a in ("8KB", "8MB") for m in ("commit", "session")
+            for n in sorted({r["nodes"] for r in rows})),
+    ),
+    Claim(
+        "session == commit within 10% for write-only workloads (Fig 3)",
+        lambda rows: all(
+            _close(pick(rows, workload=w, access=a, nodes=n,
+                        model="commit")["write_bw"],
+                   pick(rows, workload=w, access=a, nodes=n,
+                        model="session")["write_bw"], 0.10)
+            for a in ("8KB", "8MB") for w in ("CN-W", "SN-W")
+            for n in sorted({r["nodes"] for r in rows})),
+    ),
+    Claim(
+        "8MB writes reach >=90% of peak SSD bandwidth on every scale",
+        lambda rows: all(r["frac_peak"] >= 0.90 for r in rows
+                         if r["access"] == "8MB"),
+    ),
+    Claim(
+        "8KB writes stay under 40% of peak (cannot saturate the device)",
+        lambda rows: all(r["frac_peak"] <= 0.40 for r in rows
+                         if r["access"] == "8KB"),
+    ),
+]

@@ -1,0 +1,91 @@
+"""Paper Fig. 5 — SCR checkpoint/restart of HACC-IO (partner redundancy).
+
+Claims reproduced (paper §6.2):
+ 1. checkpoint: both models reach the same (peak) SSD write bandwidth at
+    every scale — consistency overhead is invisible behind 38MB/rank
+    sequential writes,
+ 2. restart: reads come from node-local memory buffers; SESSION restart
+    bandwidth scales ~linearly with node count while COMMIT plateaus —
+    one query RPC per array read funnels into the single global server.
+
+``n`` counts nodes INCLUDING the one spare; ranks = (n-1) x p.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import Claim, pick
+from repro.io.scr import SCRConfig, run_scr
+
+NODES = (3, 5, 9, 17)           # n-1 write nodes: 2, 4, 8, 16
+PARTICLES = 10_000_000          # paper: 10M (380 MB total checkpoint)
+
+
+def run(fast: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    nodes = NODES[:2] if fast else NODES
+    for n in nodes:
+        for model in ("commit", "session"):
+            cfg = SCRConfig(n=n, model=model, p=12, particles=PARTICLES)
+            res = run_scr(cfg)
+            rows.append({
+                "nodes": n, "write_nodes": cfg.write_nodes, "model": model,
+                "ckpt_bw": round(res.checkpoint_bandwidth),
+                "ckpt_bw_per_node": round(
+                    res.checkpoint_bandwidth / cfg.write_nodes),
+                "restart_bw": round(res.restart_bandwidth),
+                "rpc_query": res.rpc_counts["query"],
+                "rpc_attach": res.rpc_counts["attach"],
+                "verified": res.verified_reads,
+            })
+    return rows
+
+
+def _bw(rows, model, n, key):
+    return pick(rows, model=model, nodes=n)[key]
+
+
+CLAIMS = [
+    Claim(
+        "checkpoint bandwidth: session == commit within 5% at every scale",
+        lambda rows: all(
+            abs(_bw(rows, "session", n, "ckpt_bw")
+                - _bw(rows, "commit", n, "ckpt_bw"))
+            <= 0.05 * _bw(rows, "commit", n, "ckpt_bw")
+            for n in sorted({r["nodes"] for r in rows})),
+    ),
+    Claim(
+        "checkpoint bandwidth >= 90% of peak SSD per write node, both models",
+        lambda rows: all(r["ckpt_bw_per_node"] >= 0.90e9 for r in rows),
+    ),
+    Claim(
+        "restart: session keeps >=50% scaling efficiency largest/smallest "
+        "(paper shows near-linear to 16 nodes; our 30us master eventually "
+        "caps even session's one-query-per-rank — EXPERIMENTS §Deviations)",
+        lambda rows: (
+            _bw(rows, "session", max(r["nodes"] for r in rows), "restart_bw")
+            / _bw(rows, "session", min(r["nodes"] for r in rows), "restart_bw")
+            >= 0.50 * (max(r["nodes"] for r in rows) - 1)
+            / (min(r["nodes"] for r in rows) - 1)),
+    ),
+    Claim(
+        "restart: commit scales WORSE than session (server becomes the "
+        "bottleneck; Fig 5)",
+        lambda rows: (
+            _bw(rows, "commit", max(r["nodes"] for r in rows), "restart_bw")
+            / max(_bw(rows, "commit", min(r["nodes"] for r in rows),
+                      "restart_bw"), 1)
+            < 0.8 * _bw(rows, "session", max(r["nodes"] for r in rows),
+                        "restart_bw")
+            / max(_bw(rows, "session", min(r["nodes"] for r in rows),
+                      "restart_bw"), 1)),
+    ),
+    Claim(
+        "restart: session > commit at the largest scale",
+        lambda rows: (
+            _bw(rows, "session", max(r["nodes"] for r in rows), "restart_bw")
+            > _bw(rows, "commit", max(r["nodes"] for r in rows),
+                  "restart_bw")),
+    ),
+]

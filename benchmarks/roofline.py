@@ -1,0 +1,139 @@
+"""§Roofline — three-term roofline per (arch x shape x mesh) from dry-run
+artifacts (``artifacts/dryrun/*.json``, written by ``repro.launch.dryrun``).
+
+Terms (seconds, PER DEVICE — the dry-run HLO is the per-device SPMD
+module, so its FLOPs/bytes are already per-chip):
+
+    compute    = hlo_dot_flops / PEAK_FLOPS          (197 TF/s bf16, v5e)
+    memory     = hlo_hbm_bytes / HBM_BW              (819 GB/s)
+    collective = wire_bytes    / ICI_BW              (50 GB/s per link; we
+                 price a single link — a ring all-reduce moves its traffic
+                 over one link per direction)
+
+MODEL_FLOPS (useful work): 6·N·D for training (N = active params, D =
+tokens; fwd+bwd), 2·N·D for inference cells (forward only).  The ratio
+MODEL_FLOPS/HLO_FLOPs exposes remat/replication waste: a ratio « 1 means
+the compiled module computes far more than the model requires (e.g.
+attention replicated because heads % mesh_axis != 0).
+
+``roofline fraction`` = (model_flops/device) / (PEAK_FLOPS x max(terms)):
+the fraction of a perfectly-overlapped chip-seconds budget doing useful
+model math.  This is the score §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+HBM_GB = 16                  # v5e HBM capacity
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+
+def _advice(row: Dict) -> str:
+    dom = row["dominant"]
+    ratio = row["useful_ratio"]
+    if row.get("status") != "ok":
+        return row.get("reason", row.get("error", ""))[:90]
+    if dom == "compute" and ratio < 0.5:
+        return ("HLO computes %.1fx the model's FLOPs — replicated/remat "
+                "compute; reshard (heads%%axis!=0) or relax remat"
+                % (1 / max(ratio, 1e-9)))
+    if dom == "compute":
+        return "compute-bound at good efficiency; try microbatch/window tuning"
+    if dom == "memory":
+        return ("HBM-bound: fuse/keep bf16 residents, shrink remat saves, "
+                "or raise arithmetic intensity (larger per-chip tiles)")
+    return ("collective-bound: overlap collectives with compute, shard to "
+            "cut all-gather payloads, or move the axis with less traffic")
+
+
+def load_rows(artifact_dir: Optional[str] = None) -> List[Dict]:
+    rows: List[Dict] = []
+    for path in sorted(glob.glob(os.path.join(
+            artifact_dir or ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row: Dict = {
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": rec.get("status", "?"),
+        }
+        if rec.get("status") != "ok":
+            row.update(reason=rec.get("reason", rec.get("error", "")),
+                       dominant="-", useful_ratio=0.0)
+            rows.append(row)
+            continue
+        comp = rec["hlo_flops_per_device"] / PEAK_FLOPS
+        memt = rec["hlo_bytes_per_device"] / HBM_BW
+        coll = rec["collectives"]["wire_bytes_per_device"] / ICI_BW
+        terms = {"compute": comp, "memory": memt, "collective": coll}
+        dom = max(terms, key=terms.get)
+        n_act = rec["params_active"]
+        model_flops = (2 * rec["flops_factor"]) * n_act * rec["tokens"]
+        mf_dev = model_flops / rec["devices"]
+        denom = max(max(terms.values()), 1e-30)
+        hbm_gib = (rec.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+                   + rec.get("state_bytes_per_device", 0)
+                   + rec.get("cache_bytes_per_device", 0)) / 2**30
+        row.update({
+            "mode": rec["mode"],
+            "compute_s": comp, "memory_s": memt, "collective_s": coll,
+            "dominant": dom,
+            "model_flops": model_flops,
+            "useful_ratio": (mf_dev / rec["hlo_flops_per_device"]
+                             if rec["hlo_flops_per_device"] else 0.0),
+            "roofline_frac": mf_dev / (PEAK_FLOPS * denom),
+            "hbm_gib": hbm_gib,
+            "fits_hbm": hbm_gib <= HBM_GB,
+            "compile_s": rec.get("compile_s"),
+        })
+        row["advice"] = _advice(row)
+        rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} {'dom':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'useful':>7s} {'roofl%':>7s} {'HBMGiB':>7s} fit")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+                         f"{r['status'].upper():10s} {r.get('reason','')[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['dominant']:10s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['useful_ratio']:7.3f} {100*r['roofline_frac']:6.1f}% "
+            f"{r['hbm_gib']:7.2f} {'Y' if r['fits_hbm'] else 'N'}")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    rows = load_rows()
+    if not rows:
+        print("no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return 1
+    print(format_table(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"\n{len(ok)}/{len(rows)} cells compiled; "
+          f"{sum(1 for r in ok if r['fits_hbm'])}/{len(ok)} fit "
+          f"{HBM_GB}GB HBM")
+    for r in ok:
+        print(f"  {r['arch']:>22s}/{r['shape']:<12s}[{r['mesh']}]: "
+              f"{r['advice']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""Benchmark driver — one module per paper table/figure, plus roofline.
+
+Runs Fig 3 (CN-W/SN-W writes), Fig 4 (CC-R/CS-R reads), Fig 5 (SCR
+checkpoint/restart), Fig 6 (distributed-DL random reads); prints tables,
+writes ``artifacts/bench/*.csv``, evaluates every paper claim, then (if
+dry-run artifacts exist) prints the §Roofline table.
+
+Every benchmark run verifies all bytes it reads — these are correctness
+tests of the consistency layers as much as performance measurements.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig6]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import fig3_write, fig4_read, fig5_scr, fig6_dl, roofline
+from benchmarks.common import print_table, save_csv
+
+FIGS = {
+    "fig3": (fig3_write, "Fig 3: write bandwidth (CN-W, SN-W)",
+             ("workload", "access", "nodes", "model", "write_bw",
+              "frac_peak", "rpc_attach", "rpc_query")),
+    "fig4": (fig4_read, "Fig 4: read-after-write bandwidth (CC-R, CS-R)",
+             ("workload", "access", "nodes", "model", "read_bw",
+              "rpc_query", "verified")),
+    "fig5": (fig5_scr, "Fig 5: SCR checkpoint/restart (HACC-IO, Partner)",
+             ("nodes", "write_nodes", "model", "ckpt_bw",
+              "ckpt_bw_per_node", "restart_bw", "rpc_query")),
+    "fig6": (fig6_dl, "Fig 6: DL random-read bandwidth (Preloaded)",
+             ("scaling", "hosts", "model", "read_bw", "local_frac",
+              "queries", "samples")),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="2 scale points per figure instead of 4")
+    ap.add_argument("--only", default="",
+                    help="comma list of figures (fig3,fig4,fig5,fig6)")
+    ap.add_argument("--no-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    wanted = [w for w in args.only.split(",") if w] or list(FIGS)
+    all_pass = True
+    claim_summary = []
+    for key in wanted:
+        mod, title, cols = FIGS[key]
+        t0 = time.time()
+        rows = mod.run(fast=args.fast)
+        dt = time.time() - t0
+        print_table(f"{title}   [{dt:.1f}s, {len(rows)} points]",
+                    rows, cols)
+        path = save_csv(key, rows)
+        print(f"  csv: {path}")
+        for claim in mod.CLAIMS:
+            ok = claim.evaluate(rows)
+            all_pass &= ok
+            claim_summary.append((key, claim.text, ok))
+
+    print("\n### Paper-claim validation")
+    for key, text, ok in claim_summary:
+        print(f"  [{'PASS' if ok else 'FAIL'}] {key}: {text}")
+    npass = sum(1 for *_a, ok in claim_summary if ok)
+    print(f"  {npass}/{len(claim_summary)} claims hold")
+
+    if not args.no_roofline:
+        rows = roofline.load_rows()
+        if rows:
+            print("\n### Roofline (from dry-run artifacts)")
+            print(roofline.format_table(rows))
+        else:
+            print("\n(no dry-run artifacts; skipping roofline table)")
+
+    return 0 if all_pass else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

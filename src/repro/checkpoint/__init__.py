@@ -1,0 +1,23 @@
+"""Consistency-aware distributed checkpointing (the paper, integrated).
+
+The checkpoint tier IS a parallel file system with a consistency model:
+every shard write goes through CommitFS or SessionFS from
+:mod:`repro.core.consistency`, so the paper's RPC-placement difference is
+*measured* on real training state, and restart correctness is guaranteed
+by the model's MSC (writers commit/close before the manifest publishes;
+readers query/open before reading).
+"""
+
+from repro.checkpoint.serialization import (
+    deserialize_tree,
+    serialize_tree,
+    tree_manifest,
+)
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = [
+    "CheckpointManager",
+    "serialize_tree",
+    "deserialize_tree",
+    "tree_manifest",
+]

@@ -1,0 +1,5 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here."""
+
+from repro.configs.registry import ARCHS, get_config, tiny_config
+
+__all__ = ["ARCHS", "get_config", "tiny_config"]

@@ -1,0 +1,44 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (kv=8) d_ff=53248
+vocab=128256 [arXiv:2407.21783].
+
+Memory budget at 256 chips (16GB HBM v5e): params/grads/moments all bf16
+(2+2+2+2 B/param x 405B = 3.24TB -> 12.7GB/chip fully sharded), weights
+TP over model AND FSDP over data, 8 grad-accumulation microbatches for
+train_4k.  DESIGN.md §Perf discusses the bf16-Adam trade.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    kind="decoder",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=53248,
+    vocab=128256,
+    rope_theta=500_000.0,
+    policy="tp",
+    fsdp=True,
+    # seq_parallel=True was tried and REFUTED (§Perf iter C3a): GSPMD
+    # re-gathers the full sequence per block (AG 4.9e13); see EXPERIMENTS.
+    opt_state_dtype=jnp.bfloat16,
+    microbatches=16,  # sweep-3: B_mb=16 -> 1 seq/device activation saves
+)
+
+TINY = ModelConfig(
+    name="llama3-tiny",
+    kind="decoder",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=64,
+    vocab=128,
+    policy="tp",
+)

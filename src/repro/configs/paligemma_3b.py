@@ -1,0 +1,44 @@
+"""paligemma-3b [vlm]: SigLIP frontend STUB + gemma decoder.
+
+18L d_model=2048 8H (kv=1, MQA) d_ff=16384 vocab=257216
+[arXiv:2407.07726].  The SigLIP tower is stubbed: ``input_specs`` feeds
+precomputed patch embeddings (256 patches for 224px/14) that are
+projected and prepended to the token sequence.  Deviation noted in
+DESIGN.md: causal attention over the full (prefix + text) sequence
+instead of PaliGemma's bidirectional prefix.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    kind="decoder",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=16384,
+    vocab=257216,
+    ffn="geglu",
+    frontend="vision",
+    vision_patches=256,
+    policy="fsdp",
+    microbatches=16,  # train_4k HBM fit (EXPERIMENTS sweep-3)
+)
+
+TINY = ModelConfig(
+    name="paligemma-tiny",
+    kind="decoder",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=1,
+    d_head=16,
+    d_ff=64,
+    vocab=128,
+    ffn="geglu",
+    frontend="vision",
+    vision_patches=4,
+    policy="fsdp",
+)

@@ -1,0 +1,42 @@
+"""``--arch <id>`` registry over the 10 assigned architectures."""
+
+from repro.configs import (
+    falcon_mamba_7b,
+    granite_moe_1b,
+    llama3_405b,
+    paligemma_3b,
+    phi35_moe,
+    qwen2_72b,
+    qwen3_32b,
+    recurrentgemma_9b,
+    starcoder2_3b,
+    whisper_small,
+)
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "whisper-small": whisper_small,
+    "granite-moe-1b-a400m": granite_moe_1b,
+    "phi3.5-moe-42b-a6.6b": phi35_moe,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "qwen3-32b": qwen3_32b,
+    "llama3-405b": llama3_405b,
+    "qwen2-72b": qwen2_72b,
+    "starcoder2-3b": starcoder2_3b,
+    "paligemma-3b": paligemma_3b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+}
+
+ARCHS = {name: mod.CONFIG for name, mod in _MODULES.items()}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; choose from {sorted(ARCHS)}") from None
+
+
+def tiny_config(name: str) -> ModelConfig:
+    return _MODULES[name].TINY

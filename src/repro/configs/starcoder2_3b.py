@@ -1,0 +1,41 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (kv=2) d_ff=12288
+vocab=49152, RoPE, layernorm + gelu FFN [arXiv:2402.19173].
+
+24 heads do not divide a 16-way model axis -> pure-FSDP policy: weights
+ZeRO-3-sharded over (data x model), compute data-parallel with on-the-fly
+all-gather (GSPMD).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    kind="decoder",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    d_head=128,
+    d_ff=12288,
+    vocab=49152,
+    norm="layernorm",
+    ffn="gelu",
+    policy="fsdp",
+    # remat_policy="save_attn" was tried and REFUTED (§Perf iter 3): the
+    # scan-flash VJP recomputes chunk internals regardless; keep "full".
+)
+
+TINY = ModelConfig(
+    name="starcoder2-tiny",
+    kind="decoder",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=64,
+    vocab=128,
+    norm="layernorm",
+    ffn="gelu",
+    policy="fsdp",
+)

@@ -1,0 +1,48 @@
+"""Core of the reproduction: the paper's contribution, executable.
+
+* :mod:`repro.core.intervals`   — interval maps (paper §5.1.2 trees)
+* :mod:`repro.core.basefs`      — BaseFS primitives (Table 5) + event ledger
+* :mod:`repro.core.consistency` — PosixFS / CommitFS / SessionFS / MPIIOFS (Table 6)
+* :mod:`repro.core.model`       — formal SCNF framework (§4, Table 4)
+* :mod:`repro.core.checker`     — storage-race detection + SC oracle on real runs
+* :mod:`repro.core.costmodel`   — discrete-event replay on Catalyst constants (§6)
+"""
+
+from repro.core.basefs import BaseFS, EventKind, EventLedger
+from repro.core.consistency import (
+    CommitFS,
+    MPIIOFS,
+    PosixFS,
+    SessionFS,
+    make_fs,
+)
+from repro.core.costmodel import CostModel, HardwareConstants
+from repro.core.model import (
+    COMMIT_MODEL,
+    COMMIT_RELAXED_MODEL,
+    Execution,
+    MODELS,
+    MPIIO_MODEL,
+    POSIX_MODEL,
+    SESSION_MODEL,
+)
+
+__all__ = [
+    "BaseFS",
+    "EventKind",
+    "EventLedger",
+    "CommitFS",
+    "MPIIOFS",
+    "PosixFS",
+    "SessionFS",
+    "make_fs",
+    "CostModel",
+    "HardwareConstants",
+    "Execution",
+    "MODELS",
+    "POSIX_MODEL",
+    "COMMIT_MODEL",
+    "COMMIT_RELAXED_MODEL",
+    "SESSION_MODEL",
+    "MPIIO_MODEL",
+]

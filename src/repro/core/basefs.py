@@ -1,0 +1,417 @@
+"""BaseFS — the paper's base-layer burst-buffer PFS (§5.1, Table 5).
+
+BaseFS provides *no* implicit consistency.  Each logical client buffers its
+writes in a node-local burst buffer (here: an in-RAM bytearray standing in
+for the Intel 910 SSD); visibility between clients is established only by
+explicit ``attach`` / ``query`` synchronization primitives handled by a
+single global server.  Consistency layers (PosixFS/CommitFS/SessionFS/
+MPIIOFS, see :mod:`repro.core.consistency`) are built on these primitives.
+
+Everything observable by the cost model is recorded in an :class:`EventLedger`:
+per-client SSD bytes, client-to-client transfer bytes, underlying-PFS bytes,
+and every server RPC with its type and payload size.  The discrete-event
+cost model (:mod:`repro.core.costmodel`) replays the ledger against hardware
+constants to produce bandwidth numbers; BaseFS itself moves real bytes so
+correctness is testable end-to-end.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.intervals import BufferIntervalMap, Interval, OwnerIntervalMap
+
+
+class BFSError(Exception):
+    """Erroneous use of a BaseFS primitive (per Table 5 return conventions)."""
+
+
+# --------------------------------------------------------------------------
+# Event ledger — the measured substrate the cost model replays.
+# --------------------------------------------------------------------------
+class EventKind(Enum):
+    SSD_WRITE = "ssd_write"          # client -> local burst buffer
+    SSD_READ = "ssd_read"            # local burst buffer -> client
+    NET_TRANSFER = "net"             # owner client -> reader client (RDMA)
+    PFS_WRITE = "pfs_write"          # flush to underlying PFS (Lustre)
+    PFS_READ = "pfs_read"            # read from underlying PFS
+    RPC = "rpc"                      # client <-> global server message
+    MEM_READ = "mem_read"            # served from local memory buffer (SCR)
+    MEM_WRITE = "mem_write"
+    MARKER = "marker"                # phase boundary / global barrier
+
+
+@dataclass(frozen=True)
+class Event:
+    kind: EventKind
+    client: int                      # issuing client (node id encoded by caller)
+    nbytes: int = 0
+    rpc_type: str = ""               # attach/detach/query/stat
+    peer: int = -1                   # transfer peer (owner for NET_TRANSFER)
+    seq: int = 0                     # global issue order
+
+
+class EventLedger:
+    """Append-only record of every I/O and RPC event in issue order."""
+
+    def __init__(self) -> None:
+        self.events: List[Event] = []
+        self._seq = itertools.count()
+        self.client_node: Dict[int, int] = {}  # client id -> node id
+
+    def record(self, kind: EventKind, client: int, nbytes: int = 0,
+               rpc_type: str = "", peer: int = -1) -> None:
+        self.events.append(
+            Event(kind, client, nbytes, rpc_type, peer, next(self._seq))
+        )
+
+    def mark_phase(self, name: str) -> None:
+        """Global barrier + phase boundary for the cost model."""
+        self.record(EventKind.MARKER, -1, rpc_type=name)
+
+    def clear(self) -> None:
+        self.events.clear()
+
+    # ---- aggregate views used by tests and the cost model ----
+    def count(self, kind: EventKind, rpc_type: Optional[str] = None) -> int:
+        return sum(
+            1
+            for e in self.events
+            if e.kind is kind and (rpc_type is None or e.rpc_type == rpc_type)
+        )
+
+    def total_bytes(self, kind: EventKind) -> int:
+        return sum(e.nbytes for e in self.events if e.kind is kind)
+
+
+# --------------------------------------------------------------------------
+# Underlying system-level PFS (Lustre stand-in).
+# --------------------------------------------------------------------------
+class UnderlyingPFS:
+    """Flat byte-addressed files; the slow shared tier below BaseFS."""
+
+    def __init__(self, ledger: EventLedger) -> None:
+        self._files: Dict[str, bytearray] = {}
+        self._ledger = ledger
+
+    def write(self, client: int, path: str, offset: int, data: bytes) -> None:
+        buf = self._files.setdefault(path, bytearray())
+        if len(buf) < offset + len(data):
+            buf.extend(b"\0" * (offset + len(data) - len(buf)))
+        buf[offset : offset + len(data)] = data
+        self._ledger.record(EventKind.PFS_WRITE, client, len(data))
+
+    def read(self, client: int, path: str, offset: int, size: int) -> bytes:
+        buf = self._files.get(path, bytearray())
+        out = bytes(buf[offset : offset + size])
+        if len(out) < size:  # reads past PFS EOF are zero-filled
+            out += b"\0" * (size - len(out))
+        self._ledger.record(EventKind.PFS_READ, client, size)
+        return out
+
+    def size(self, path: str) -> int:
+        return len(self._files.get(path, b""))
+
+
+# --------------------------------------------------------------------------
+# Global server (paper §5.1.2): master + round-robin worker queues.
+# --------------------------------------------------------------------------
+@dataclass
+class ServerTask:
+    rpc_type: str
+    client: int
+    nbytes: int
+    seq: int
+
+
+class GlobalServer:
+    """Single global server holding per-file owner interval trees.
+
+    The master thread is modeled as the dispatch loop in :meth:`submit`;
+    worker selection is round-robin as in the paper.  Task *content* runs
+    inline (we are single-process); queue *timing* is replayed by the DES.
+    """
+
+    def __init__(self, ledger: EventLedger, num_workers: int = 23) -> None:
+        # Catalyst nodes have 24 cores: 1 master + 23 workers.
+        self.trees: Dict[str, OwnerIntervalMap] = {}
+        self.ledger = ledger
+        self.num_workers = num_workers
+        self.worker_tasks: List[List[ServerTask]] = [[] for _ in range(num_workers)]
+        self._rr = 0
+        self._task_seq = itertools.count()
+
+    def _tree(self, path: str) -> OwnerIntervalMap:
+        return self.trees.setdefault(path, OwnerIntervalMap())
+
+    def submit(self, rpc_type: str, client: int, nbytes: int) -> None:
+        """Record the RPC and enqueue the task round-robin (paper's design)."""
+        self.ledger.record(EventKind.RPC, client, nbytes, rpc_type=rpc_type)
+        task = ServerTask(rpc_type, client, nbytes, next(self._task_seq))
+        self.worker_tasks[self._rr].append(task)
+        self._rr = (self._rr + 1) % self.num_workers
+
+    # ---- RPC handlers -------------------------------------------------
+    def attach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> None:
+        # One RPC packs all supplied ranges (paper: "a single RPC request").
+        payload = 24 * len(runs)  # ~3x8B per range descriptor
+        self.submit("attach", client, payload)
+        tree = self._tree(path)
+        for start, end in runs:
+            tree.attach(start, end, client)
+
+    def detach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> bool:
+        self.submit("detach", client, 24 * len(runs))
+        tree = self._tree(path)
+        any_removed = False
+        for start, end in runs:
+            any_removed |= tree.detach(start, end, client)
+        return any_removed
+
+    def query(self, client: int, path: str, start: int, end: int) -> List[Interval]:
+        self.submit("query", client, 24)
+        return self._tree(path).owners(start, end)
+
+    def query_file(self, client: int, path: str) -> List[Interval]:
+        self.submit("query", client, 24)
+        tree = self._tree(path)
+        return tree.owners(0, tree.max_end) if len(tree) else []
+
+    def stat_eof(self, client: int, path: str, pfs_size: int) -> int:
+        self.submit("stat", client, 16)
+        return max(self._tree(path).max_end, pfs_size)
+
+
+# --------------------------------------------------------------------------
+# Client-side state.
+# --------------------------------------------------------------------------
+SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
+
+
+@dataclass
+class _OpenFile:
+    path: str
+    pos: int = 0
+    local: BufferIntervalMap = field(default_factory=BufferIntervalMap)
+    local_eof: int = 0  # max end this client has written/seen
+
+
+class BFSClient:
+    """One logical client process with a node-local burst buffer.
+
+    ``node`` identifies the physical node (several clients share a node's
+    SSD in the paper's experiments; the DES charges SSD bandwidth per node).
+    """
+
+    def __init__(self, fs: "BaseFS", client_id: int, node: int,
+                 tier: str = "ssd") -> None:
+        self.fs = fs
+        self.id = client_id
+        self.node = node
+        self.tier = tier  # "ssd" (Intel 910) or "mem" (SCR memory buffer)
+        self.buffer = bytearray()  # node-local burst-buffer file (this client's)
+        self.files: Dict[int, _OpenFile] = {}
+        self._next_handle = itertools.count(1)
+
+    # ---- buffer helpers ----
+    def _buffer_append(self, data: bytes) -> int:
+        off = len(self.buffer)
+        self.buffer.extend(data)
+        return off
+
+    def buffer_read(self, buf_start: int, size: int) -> bytes:
+        return bytes(self.buffer[buf_start : buf_start + size])
+
+
+class BaseFS:
+    """The whole simulated deployment: N logical clients + 1 global server.
+
+    Construct once per experiment; create clients with :meth:`client`.
+    """
+
+    def __init__(self, num_workers: int = 23) -> None:
+        self.ledger = EventLedger()
+        self.server = GlobalServer(self.ledger, num_workers=num_workers)
+        self.pfs = UnderlyingPFS(self.ledger)
+        self.clients: Dict[int, BFSClient] = {}
+
+    def client(self, client_id: int, node: Optional[int] = None,
+               tier: str = "ssd") -> BFSClient:
+        if client_id not in self.clients:
+            c = BFSClient(
+                self, client_id, node if node is not None else client_id,
+                tier=tier,
+            )
+            self.clients[client_id] = c
+            self.ledger.client_node[client_id] = c.node
+        return self.clients[client_id]
+
+    # =====================================================================
+    # Table 5 primitives.  All take the acting client explicitly.
+    # =====================================================================
+    def bfs_open(self, c: BFSClient, pathname: str) -> int:
+        h = next(c._next_handle)
+        c.files[h] = _OpenFile(pathname)
+        return h
+
+    def bfs_close(self, c: BFSClient, h: int) -> int:
+        # Buffered data is DISCARDED, not flushed (paper Table 5).
+        c.files.pop(h, None)
+        return 0
+
+    def bfs_write(self, c: BFSClient, h: int, data: bytes) -> int:
+        f = c.files[h]
+        buf_start = c._buffer_append(data)
+        kind = EventKind.MEM_WRITE if c.tier == "mem" else EventKind.SSD_WRITE
+        self.ledger.record(kind, c.id, len(data))
+        f.local.record_write(f.pos, f.pos + len(data), buf_start)
+        f.pos += len(data)
+        f.local_eof = max(f.local_eof, f.pos)
+        return len(data)
+
+    def bfs_read(self, c: BFSClient, h: int, size: int,
+                 owner: Optional[int]) -> bytes:
+        """Read ``size`` bytes at the current position from ``owner``'s buffer.
+
+        owner None  -> read the underlying PFS directly.
+        owner == c.id -> local burst-buffer read.
+        otherwise   -> client-to-client transfer (RDMA in the paper).
+        """
+        f = c.files[h]
+        start, end = f.pos, f.pos + size
+        if owner is None:
+            data = self.pfs.read(c.id, f.path, start, size)
+            f.pos = end
+            return data
+        oc = self.clients.get(owner)
+        if oc is None:
+            raise BFSError(f"unknown owner client {owner}")
+        # Locate the owner's open handle state for this path: owners serve
+        # reads from their buffered (attached) writes.
+        of = self._find_owner_state(oc, f.path)
+        if of is None or not of.local.covers(start, end):
+            raise BFSError(
+                f"owner {owner} does not own [{start},{end}) of {f.path}"
+            )
+        parts = []
+        for fs_, fe_, bs_ in of.local.buffer_runs(start, end):
+            parts.append(oc.buffer_read(bs_, fe_ - fs_))
+        data = b"".join(parts)
+        if owner == c.id:
+            kind = (EventKind.MEM_READ if c.tier == "mem"
+                    else EventKind.SSD_READ)
+            self.ledger.record(kind, c.id, size)
+        else:
+            # Owner reads its device and ships bytes over the interconnect;
+            # both costs are charged to the reader's blocking chain by the
+            # DES (the peer field carries the owner for node lookup; the
+            # rpc_type field tags the owner-side device tier).
+            self.ledger.record(EventKind.NET_TRANSFER, c.id, size,
+                               rpc_type=oc.tier, peer=owner)
+        f.pos = end
+        return data
+
+    def _find_owner_state(self, oc: BFSClient, path: str) -> Optional[_OpenFile]:
+        for of in oc.files.values():
+            if of.path == path:
+                return of
+        # Owner may have closed the handle but must keep serving attached
+        # ranges (the paper keeps a listener thread); retain a shadow map.
+        return oc.__dict__.setdefault("_shadow", {}).get(path)
+
+    def _shadow_owner_state(self, c: BFSClient, f: _OpenFile) -> None:
+        c.__dict__.setdefault("_shadow", {})[f.path] = f
+
+    def bfs_attach(self, c: BFSClient, h: int, offset: int, size: int) -> int:
+        f = c.files[h]
+        if not f.local.written(offset, offset + size):
+            raise BFSError("attaching unwritten bytes is erroneous (Table 5)")
+        runs = [(s, e) for s, e, _ in f.local.buffer_runs(offset, offset + size)]
+        self.server.attach(c.id, f.path, runs)
+        f.local.mark_attached(offset, offset + size)
+        self._shadow_owner_state(c, f)
+        return 0
+
+    def bfs_attach_file(self, c: BFSClient, h: int) -> int:
+        f = c.files[h]
+        runs = [(s, e) for s, e, _ in f.local.unattached_runs()]
+        if not runs:
+            return 0  # no-op per Table 5
+        self.server.attach(c.id, f.path, runs)
+        for s, e in runs:
+            f.local.mark_attached(s, e)
+        self._shadow_owner_state(c, f)
+        return 0
+
+    def bfs_query(self, c: BFSClient, h: int, offset: int,
+                  size: int) -> List[Interval]:
+        f = c.files[h]
+        return self.server.query(c.id, f.path, offset, offset + size)
+
+    def bfs_query_file(self, c: BFSClient, h: int) -> List[Interval]:
+        f = c.files[h]
+        return self.server.query_file(c.id, f.path)
+
+    def bfs_detach(self, c: BFSClient, h: int, offset: int, size: int) -> int:
+        f = c.files[h]
+        attached = [
+            (s, e)
+            for s, e, _ in f.local.buffer_runs(
+                offset, offset + size, attached=True
+            )
+        ]
+        if not attached:
+            raise BFSError("detaching a never-attached range (Table 5)")
+        self.server.detach(c.id, f.path, attached)
+        f.local.remove(offset, offset + size)
+        return 0
+
+    def bfs_detach_file(self, c: BFSClient, h: int) -> int:
+        f = c.files[h]
+        runs = [(s, e) for s, e, _ in f.local.attached_runs()]
+        if not runs:
+            return 0  # no-op
+        self.server.detach(c.id, f.path, runs)
+        for s, e in runs:
+            f.local.remove(s, e)
+        return 0
+
+    def bfs_flush(self, c: BFSClient, h: int, offset: int, size: int) -> int:
+        f = c.files[h]
+        for fs_, fe_, bs_ in f.local.buffer_runs(offset, offset + size):
+            self.ledger.record(EventKind.SSD_READ, c.id, fe_ - fs_)
+            self.pfs.write(c.id, f.path, fs_, c.buffer_read(bs_, fe_ - fs_))
+        return 0
+
+    def bfs_flush_file(self, c: BFSClient, h: int) -> int:
+        f = c.files[h]
+        for iv in list(f.local):
+            slot = iv.value
+            self.ledger.record(EventKind.SSD_READ, c.id, iv.length)
+            self.pfs.write(
+                c.id, f.path, iv.start, c.buffer_read(slot.buf_start, iv.length)
+            )
+        return 0
+
+    def bfs_seek(self, c: BFSClient, h: int, offset: int, whence: int) -> int:
+        f = c.files[h]
+        if whence == SEEK_SET:
+            f.pos = offset
+        elif whence == SEEK_CUR:
+            f.pos += offset
+        elif whence == SEEK_END:
+            f.pos = self.bfs_stat_size(c, h) + offset
+        else:
+            raise BFSError(f"bad whence {whence}")
+        return f.pos
+
+    def bfs_tell(self, c: BFSClient, h: int) -> int:
+        return c.files[h].pos
+
+    def bfs_stat_size(self, c: BFSClient, h: int) -> int:
+        f = c.files[h]
+        global_eof = self.server.stat_eof(c.id, f.path, self.pfs.size(f.path))
+        return max(global_eof, f.local_eof)

@@ -1,0 +1,251 @@
+"""Consistency layers over BaseFS (paper §5.2, Table 6).
+
+Each layer exposes the paper's API and differs ONLY in where it places the
+``attach`` / ``query`` primitives:
+
+=============  =====================================================
+PosixFS        write -> bfs_write; bfs_attach       read -> bfs_query; bfs_read
+CommitFS       write -> bfs_write                   read -> bfs_query; bfs_read
+               commit -> bfs_attach_file
+SessionFS      write -> bfs_write                   read -> bfs_read (cached owners)
+               session_open -> bfs_query_file       session_close -> bfs_attach_file
+MPIIOFS        MPI-IO third-level consistency: sync/close flush-attach, sync/open
+               query; sequential consistency per single file handle.
+=============  =====================================================
+
+Reads that hit a range with *no* attached owner fall through to the
+underlying PFS (latest flushed data), per §5.1.2.  Reads covering multiple
+owners are split along the owner intervals returned by the query.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.basefs import SEEK_SET, BaseFS, BFSClient, BFSError
+from repro.core.intervals import Interval, OwnerIntervalMap
+
+
+@dataclass
+class FileHandle:
+    """Opaque per-layer handle wrapping a BaseFS handle."""
+
+    client: BFSClient
+    bfs_handle: int
+    path: str
+    # SessionFS: owner map snapshot taken at session_open.
+    owner_cache: Optional[OwnerIntervalMap] = None
+    in_session: bool = False
+
+
+class _LayeredFS:
+    """Shared mechanics: owner-resolved reads, positioning, stat."""
+
+    name = "base"
+
+    def __init__(self, fs: Optional[BaseFS] = None) -> None:
+        self.fs = fs or BaseFS()
+
+    # ---- lifecycle ----
+    def open(self, client_id: int, path: str, node: Optional[int] = None
+             ) -> FileHandle:
+        c = self.fs.client(client_id, node)
+        h = self.fs.bfs_open(c, path)
+        return FileHandle(c, h, path)
+
+    def close(self, fh: FileHandle) -> int:
+        return self.fs.bfs_close(fh.client, fh.bfs_handle)
+
+    def seek(self, fh: FileHandle, offset: int, whence: int = SEEK_SET) -> int:
+        return self.fs.bfs_seek(fh.client, fh.bfs_handle, offset, whence)
+
+    def tell(self, fh: FileHandle) -> int:
+        return self.fs.bfs_tell(fh.client, fh.bfs_handle)
+
+    def stat_size(self, fh: FileHandle) -> int:
+        return self.fs.bfs_stat_size(fh.client, fh.bfs_handle)
+
+    # ---- owner-resolved read used by every layer ----
+    def _read_resolved(self, fh: FileHandle, size: int,
+                       owners: List[Interval]) -> bytes:
+        """Read [pos, pos+size) splitting along the owner intervals.
+
+        ``owners`` are the attach intervals overlapping the range (possibly
+        empty).  Unowned gaps are served by the underlying PFS.  A reader
+        that owns a sub-range serves it from its own buffer.
+        """
+        fs, c, h = self.fs, fh.client, fh.bfs_handle
+        start = fs.bfs_tell(c, h)
+        end = start + size
+        parts: List[bytes] = []
+        pos = start
+        segs: List[Tuple[int, int, Optional[int]]] = []
+        for iv in sorted(owners, key=lambda v: v.start):
+            s, e = max(iv.start, start), min(iv.end, end)
+            if s > pos:
+                segs.append((pos, s, None))
+            if e > s:
+                segs.append((s, e, iv.value))
+            pos = max(pos, e)
+        if pos < end:
+            segs.append((pos, end, None))
+        # Local writes are immediately visible to the writing process
+        # (Table 5): prefer the reader's own buffer over the PFS for
+        # unowned segments it has written.
+        f = c.files[h]
+        resolved: List[Tuple[int, int, Optional[int]]] = []
+        for s, e, owner in segs:
+            if owner is not None:
+                resolved.append((s, e, owner))
+                continue
+            p = s
+            for ls, le, _ in f.local.buffer_runs(s, e):
+                if ls > p:
+                    resolved.append((p, ls, None))
+                resolved.append((ls, le, c.id))
+                p = le
+            if p < e:
+                resolved.append((p, e, None))
+        for s, e, owner in resolved:
+            fs.bfs_seek(c, h, s, SEEK_SET)
+            parts.append(fs.bfs_read(c, h, e - s, owner))
+        fs.bfs_seek(c, h, end, SEEK_SET)
+        return b"".join(parts)
+
+
+class PosixFS(_LayeredFS):
+    """POSIX consistency: attach on every write, query on every read."""
+
+    name = "posix"
+
+    def write(self, fh: FileHandle, data: bytes) -> int:
+        fs, c, h = self.fs, fh.client, fh.bfs_handle
+        pos = fs.bfs_tell(c, h)
+        n = fs.bfs_write(c, h, data)
+        fs.bfs_attach(c, h, pos, len(data))
+        return n
+
+    def read(self, fh: FileHandle, size: int) -> bytes:
+        fs, c, h = self.fs, fh.client, fh.bfs_handle
+        pos = fs.bfs_tell(c, h)
+        owners = fs.bfs_query(c, h, pos, size)
+        return self._read_resolved(fh, size, owners)
+
+
+class CommitFS(_LayeredFS):
+    """Commit consistency: attach only at commit; query before every read."""
+
+    name = "commit"
+
+    def write(self, fh: FileHandle, data: bytes) -> int:
+        return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
+
+    def commit(self, fh: FileHandle) -> int:
+        """Make all this client's uncommitted writes to the file visible."""
+        return self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+
+    def read(self, fh: FileHandle, size: int) -> bytes:
+        fs, c, h = self.fs, fh.client, fh.bfs_handle
+        pos = fs.bfs_tell(c, h)
+        owners = fs.bfs_query(c, h, pos, size)
+        return self._read_resolved(fh, size, owners)
+
+
+class SessionFS(_LayeredFS):
+    """Session (close-to-open) consistency.
+
+    ``session_open`` performs ONE ``bfs_query_file`` and caches the owner
+    map; reads within the session resolve owners from the cache with no
+    server traffic.  ``session_close`` attaches all local writes.
+    """
+
+    name = "session"
+
+    def session_open(self, fh: FileHandle) -> None:
+        owners = self.fs.bfs_query_file(fh.client, fh.bfs_handle)
+        cache = OwnerIntervalMap()
+        for iv in owners:
+            cache.attach(iv.start, iv.end, iv.value)
+        fh.owner_cache = cache
+        fh.in_session = True
+
+    def session_close(self, fh: FileHandle) -> int:
+        rc = self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        fh.in_session = False
+        return rc
+
+    def write(self, fh: FileHandle, data: bytes) -> int:
+        return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
+
+    def read(self, fh: FileHandle, size: int) -> bytes:
+        if fh.owner_cache is None:
+            # Session never opened: only local writes / PFS are visible.
+            owners: List[Interval] = []
+        else:
+            pos = self.fs.bfs_tell(fh.client, fh.bfs_handle)
+            owners = fh.owner_cache.owners(pos, pos + size)
+        return self._read_resolved(fh, size, owners)
+
+
+class MPIIOFS(_LayeredFS):
+    """MPI-IO consistency, third level (§2.3.3, §4.2.4).
+
+    ``file_sync`` acts as BOTH a writer-side attach and a reader-side
+    query (MPI_File_sync flushes the writer's data and retrieves the
+    latest data for the reader).  ``file_open``/``file_close`` carry the
+    session-like endpoints.  Within one handle, reads resolve against the
+    snapshot retrieved by the last sync/open — mirroring that MPI-IO only
+    guarantees visibility across the sync-barrier-sync construct.
+    """
+
+    name = "mpiio"
+
+    def file_open(self, client_id: int, path: str,
+                  node: Optional[int] = None) -> FileHandle:
+        fh = self.open(client_id, path, node)
+        self._refresh(fh)
+        return fh
+
+    def _refresh(self, fh: FileHandle) -> None:
+        owners = self.fs.bfs_query_file(fh.client, fh.bfs_handle)
+        cache = OwnerIntervalMap()
+        for iv in owners:
+            cache.attach(iv.start, iv.end, iv.value)
+        fh.owner_cache = cache
+
+    def file_sync(self, fh: FileHandle) -> None:
+        # Writer side: publish local writes; reader side: refresh snapshot.
+        self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        self._refresh(fh)
+
+    def file_close(self, fh: FileHandle) -> int:
+        self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        return self.close(fh)
+
+    def write(self, fh: FileHandle, data: bytes) -> int:
+        return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
+
+    def read(self, fh: FileHandle, size: int) -> bytes:
+        owners: List[Interval] = []
+        if fh.owner_cache is not None:
+            pos = self.fs.bfs_tell(fh.client, fh.bfs_handle)
+            owners = fh.owner_cache.owners(pos, pos + size)
+        return self._read_resolved(fh, size, owners)
+
+
+LAYERS = {
+    "posix": PosixFS,
+    "commit": CommitFS,
+    "session": SessionFS,
+    "mpiio": MPIIOFS,
+}
+
+
+def make_fs(model: str, fs: Optional[BaseFS] = None) -> _LayeredFS:
+    try:
+        return LAYERS[model](fs)
+    except KeyError:
+        raise ValueError(
+            f"unknown consistency model {model!r}; choose from {sorted(LAYERS)}"
+        ) from None

@@ -1,0 +1,249 @@
+"""Discrete-event cost model replaying BaseFS ledgers (§6 methodology).
+
+BaseFS runs move real bytes and record every SSD access, client-to-client
+transfer, and server RPC in an :class:`~repro.core.basefs.EventLedger`.
+This module reconstructs the *concurrent* timing of that execution on
+paper-like hardware (LLNL Catalyst, §6): every client advances through its
+own event chain; contention arises only through shared resources —
+
+* the node-local SSD (clients on one node share one device),
+* the node NIC (client-to-client "RDMA" reads),
+* the single global server (master dispatch serialization + a round-robin
+  worker pool with FIFO queues — exactly the paper's server architecture),
+* the underlying PFS (aggregate bandwidth).
+
+The replay is an event-driven simulation: the client with the smallest
+clock executes its next event, reserving resources FIFO.  Phase markers in
+the ledger act as global barriers and delimit the bandwidth measurements.
+
+Only the *time constants* are modeled; every count and byte replayed here
+was measured from the real (in-process) BaseFS execution.  This is the
+paper's own isolation argument one level up: the consistency model changes
+RPC placement, the ledger records the difference, the DES prices it.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.basefs import Event, EventKind, EventLedger
+
+
+@dataclass(frozen=True)
+class HardwareConstants:
+    """Catalyst-like constants (paper §6 + Intel 910 / IB QDR datasheets).
+
+    Devices are modeled as queued resources with TWO cost components:
+
+    * ``*_op`` — per-operation DEVICE occupancy (serialized at the device;
+      this is what keeps 8KB accesses below peak bandwidth, as in Fig 3),
+    * ``*_lat`` — end-to-end issue latency experienced only by the CALLING
+      client's chain (an NVMe device at queue depth 12 overlaps the
+      latencies of concurrent requests — they do not serialize the device).
+
+    The global server master is single-threaded (paper §5.1.2: "the master
+    thread handles all communications"): every RPC costs
+    ``server_occupancy`` SERIALIZED at the master.  This is the resource
+    whose saturation produces the paper's commit-vs-session gap — query
+    RPCs from hundreds of concurrent small reads queue at the master while
+    the actual data path (SSD/RDMA) is fast.  30us per RPC round trip
+    (recv + dispatch + marshal + send on IB verbs, single thread) matches
+    the scale at which the paper's Fig 4b/5/6 gaps open.
+    """
+
+    ssd_write_bw: float = 1.0e9      # B/s, peak sequential (paper)
+    ssd_read_bw: float = 2.0e9       # B/s, peak sequential (paper)
+    ssd_write_op: float = 20e-6      # s, per-op device occupancy (QD-12 amortized)
+    ssd_read_op: float = 10e-6       # s, per-op device occupancy
+    ssd_write_lat: float = 30e-6     # s, chain-only issue latency
+    ssd_read_lat: float = 60e-6      # s, chain-only issue latency
+    net_bw: float = 3.2e9            # B/s per node NIC (IB QDR)
+    net_op: float = 1e-6             # s, NIC per-message occupancy
+    net_lat: float = 2e-6            # s, RDMA one-way (chain only)
+    rpc_net_lat: float = 5e-6        # s, client<->server one way (chain)
+    server_occupancy: float = 30e-6  # s, serialized master per RPC round trip
+    task_service: float = 5e-6       # s, worker base service per task
+    task_per_range: float = 0.2e-6   # s, per 24-byte range descriptor
+    server_workers: int = 23         # paper: 24 cores = 1 master + workers
+    mem_bw: float = 10e9             # B/s, node memory buffer (SCR)
+    mem_op: float = 0.2e-6           # s, per-op occupancy
+    mem_lat: float = 0.5e-6          # s, chain-only
+    pfs_bw: float = 10e9             # B/s aggregate Lustre
+    pfs_op: float = 20e-6
+    pfs_lat: float = 100e-6
+
+
+@dataclass
+class PhaseResult:
+    name: str
+    duration: float                  # makespan of the phase (s)
+    bytes_by_kind: Dict[EventKind, int] = field(default_factory=dict)
+    rpc_count: int = 0
+    clients: int = 0
+
+    def bandwidth(self, *kinds: EventKind) -> float:
+        """Aggregate B/s over the phase for the given event kinds."""
+        total = sum(self.bytes_by_kind.get(k, 0) for k in kinds)
+        return total / self.duration if self.duration > 0 else 0.0
+
+    @property
+    def io_bandwidth(self) -> float:
+        return self.bandwidth(
+            EventKind.SSD_WRITE,
+            EventKind.SSD_READ,
+            EventKind.NET_TRANSFER,
+            EventKind.MEM_READ,
+            EventKind.MEM_WRITE,
+            EventKind.PFS_READ,
+            EventKind.PFS_WRITE,
+        )
+
+
+class _Resource:
+    """FIFO resource with an availability clock."""
+
+    __slots__ = ("avail",)
+
+    def __init__(self) -> None:
+        self.avail = 0.0
+
+    def reserve(self, ready: float, duration: float) -> float:
+        """Occupy starting no earlier than ``ready``; return finish time."""
+        start = max(self.avail, ready)
+        self.avail = start + duration
+        return self.avail
+
+
+class CostModel:
+    def __init__(self, hw: Optional[HardwareConstants] = None) -> None:
+        self.hw = hw or HardwareConstants()
+
+    # ------------------------------------------------------------------
+    def replay(self, ledger: EventLedger) -> List[PhaseResult]:
+        hw = self.hw
+        node_of = dict(ledger.client_node)
+        # Split the ledger at markers into phases.
+        phases: List[Tuple[str, List[Event]]] = []
+        cur: List[Event] = []
+        cur_name = "phase0"
+        for e in ledger.events:
+            if e.kind is EventKind.MARKER:
+                if cur:
+                    phases.append((cur_name, cur))
+                cur, cur_name = [], e.rpc_type or f"phase{len(phases)}"
+            else:
+                cur.append(e)
+        if cur:
+            phases.append((cur_name, cur))
+
+        results: List[PhaseResult] = []
+        # Resource clocks persist across phases (devices do not reset),
+        # but each phase begins at the global barrier time.
+        node_ssd: Dict[int, _Resource] = {}
+        node_nic: Dict[int, _Resource] = {}
+        node_mem: Dict[int, _Resource] = {}
+        server_master = _Resource()
+        workers = [_Resource() for _ in range(hw.server_workers)]
+        pfs = _Resource()
+        now = 0.0  # global barrier time
+        rr = 0
+
+        def res(table: Dict[int, _Resource], key: int) -> _Resource:
+            if key not in table:
+                table[key] = _Resource()
+            return table[key]
+
+        for name, events in phases:
+            # Per-client chains, concurrent within the phase.
+            chains: Dict[int, List[Event]] = {}
+            for e in events:
+                chains.setdefault(e.client, []).append(e)
+            clock: Dict[int, float] = {c: now for c in chains}
+            idx: Dict[int, int] = {c: 0 for c in chains}
+            heap: List[Tuple[float, int]] = [(now, c) for c in chains]
+            heapq.heapify(heap)
+            bytes_by_kind: Dict[EventKind, int] = {}
+            rpc_count = 0
+
+            while heap:
+                t, c = heapq.heappop(heap)
+                if idx[c] >= len(chains[c]):
+                    continue
+                e = chains[c][idx[c]]
+                idx[c] += 1
+                t = clock[c]
+                node = node_of.get(c, c)
+                k, nb = e.kind, e.nbytes
+                if k is EventKind.SSD_WRITE:
+                    t = res(node_ssd, node).reserve(
+                        t, hw.ssd_write_op + nb / hw.ssd_write_bw
+                    ) + hw.ssd_write_lat
+                elif k is EventKind.SSD_READ:
+                    t = res(node_ssd, node).reserve(
+                        t, hw.ssd_read_op + nb / hw.ssd_read_bw
+                    ) + hw.ssd_read_lat
+                elif k is EventKind.NET_TRANSFER:
+                    # Owner-side device read, then NIC transfer owner->reader.
+                    onode = node_of.get(e.peer, e.peer)
+                    if e.rpc_type == "mem":
+                        t = res(node_mem, onode).reserve(
+                            t, hw.mem_op + nb / hw.mem_bw
+                        ) + hw.mem_lat
+                    else:
+                        t = res(node_ssd, onode).reserve(
+                            t, hw.ssd_read_op + nb / hw.ssd_read_bw
+                        ) + hw.ssd_read_lat
+                    t = res(node_nic, onode).reserve(
+                        t, hw.net_op + nb / hw.net_bw
+                    ) + hw.net_lat
+                elif k is EventKind.MEM_WRITE:
+                    t = res(node_mem, node).reserve(
+                        t, hw.mem_op + nb / hw.mem_bw
+                    ) + hw.mem_lat
+                elif k is EventKind.MEM_READ:
+                    t = res(node_mem, node).reserve(
+                        t, hw.mem_op + nb / hw.mem_bw
+                    ) + hw.mem_lat
+                elif k is EventKind.PFS_WRITE:
+                    t = pfs.reserve(t, hw.pfs_op + nb / hw.pfs_bw) + hw.pfs_lat
+                elif k is EventKind.PFS_READ:
+                    t = pfs.reserve(t, hw.pfs_op + nb / hw.pfs_bw) + hw.pfs_lat
+                elif k is EventKind.RPC:
+                    rpc_count += 1
+                    arrive = t + hw.rpc_net_lat
+                    dispatched = server_master.reserve(
+                        arrive, hw.server_occupancy
+                    )
+                    nranges = max(1, nb // 24)
+                    done = workers[rr].reserve(
+                        dispatched,
+                        hw.task_service + nranges * hw.task_per_range,
+                    )
+                    rr = (rr + 1) % len(workers)
+                    t = done + hw.rpc_net_lat  # response back to client
+                bytes_by_kind[k] = bytes_by_kind.get(k, 0) + nb
+                clock[c] = t
+                if idx[c] < len(chains[c]):
+                    heapq.heappush(heap, (t, c))
+
+            end = max(clock.values(), default=now)
+            results.append(
+                PhaseResult(
+                    name=name,
+                    duration=end - now,
+                    bytes_by_kind=bytes_by_kind,
+                    rpc_count=rpc_count,
+                    clients=len(chains),
+                )
+            )
+            now = end  # global barrier
+        return results
+
+    # Convenience: one phase by name.
+    def phase(self, ledger: EventLedger, name: str) -> PhaseResult:
+        for r in self.replay(ledger):
+            if r.name == name:
+                return r
+        raise KeyError(name)

@@ -1,0 +1,322 @@
+"""Interval maps for BaseFS (paper §5.1.2).
+
+The paper uses augmented self-balancing BSTs; we implement the same semantics
+with a sorted list of disjoint intervals + bisect (O(log n) search, O(k)
+splice for the k intervals touched by an update).  Two variants:
+
+* ``OwnerIntervalMap`` — the *global* interval tree kept by the BaseFS server:
+  disjoint ``[start, end) -> owner`` ranges, where an attach by a new owner
+  splits/deletes existing intervals and contiguous same-owner intervals merge.
+
+* ``BufferIntervalMap`` — the *local* interval tree kept by each client:
+  disjoint ``[start, end) -> (buf_offset, attached)`` ranges mapping file
+  ranges to positions in the node-local burst-buffer file.
+
+All ranges are half-open ``[start, end)`` with ``0 <= start < end``.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass
+from typing import Any, Iterator, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Interval:
+    """A disjoint interval with an arbitrary payload (owner id, buffer slot...)."""
+
+    start: int
+    end: int  # exclusive
+    value: Any
+
+    def __post_init__(self) -> None:
+        if not (0 <= self.start < self.end):
+            raise ValueError(f"bad interval [{self.start}, {self.end})")
+
+    @property
+    def length(self) -> int:
+        return self.end - self.start
+
+    def overlaps(self, start: int, end: int) -> bool:
+        return self.start < end and start < self.end
+
+
+class IntervalMap:
+    """Disjoint interval map with split/merge semantics (paper §5.1.2).
+
+    ``insert`` implements the server's attach rule: an existing interval is
+    *split* if it partially overlaps the new one, *deleted* if fully covered,
+    and contiguous intervals with equal values are *merged*.
+    """
+
+    def __init__(self, merge_values: bool = True):
+        self._starts: List[int] = []
+        self._ivals: List[Interval] = []
+        self._merge = merge_values
+
+    # ------------------------------------------------------------------ util
+    def __len__(self) -> int:
+        return len(self._ivals)
+
+    def __iter__(self) -> Iterator[Interval]:
+        return iter(self._ivals)
+
+    def _first_overlap_idx(self, start: int, end: int) -> int:
+        """Index of the first stored interval with .end > start (candidate)."""
+        # _starts is sorted; find the leftmost interval that could overlap.
+        i = bisect.bisect_right(self._starts, start) - 1
+        if i >= 0 and self._ivals[i].end > start:
+            return i
+        return i + 1
+
+    # --------------------------------------------------------------- queries
+    def query(self, start: int, end: int) -> List[Interval]:
+        """All stored intervals overlapping [start, end), clipped to the range."""
+        if end <= start:
+            return []
+        out: List[Interval] = []
+        i = self._first_overlap_idx(start, end)
+        while i < len(self._ivals) and self._ivals[i].start < end:
+            iv = self._ivals[i]
+            if iv.overlaps(start, end):
+                out.append(
+                    Interval(max(iv.start, start), min(iv.end, end), iv.value)
+                )
+            i += 1
+        return out
+
+    def covers(self, start: int, end: int) -> bool:
+        """True iff [start, end) is fully covered by stored intervals."""
+        pos = start
+        for iv in self.query(start, end):
+            if iv.start > pos:
+                return False
+            pos = max(pos, iv.end)
+        return pos >= end
+
+    def gaps(self, start: int, end: int) -> List[Tuple[int, int]]:
+        """Sub-ranges of [start, end) not covered by any interval."""
+        out: List[Tuple[int, int]] = []
+        pos = start
+        for iv in self.query(start, end):
+            if iv.start > pos:
+                out.append((pos, iv.start))
+            pos = max(pos, iv.end)
+        if pos < end:
+            out.append((pos, end))
+        return out
+
+    # --------------------------------------------------------------- updates
+    def _shift_value(self, value: Any, delta: int) -> Any:
+        """Adjust a payload when its interval's start moves by ``delta``.
+
+        Plain values (owner ids) are position-independent; BufferIntervalMap
+        overrides this to keep buffer offsets aligned with file offsets.
+        """
+        return value
+
+    def insert(self, start: int, end: int, value: Any) -> None:
+        """Insert [start, end) -> value, splitting/overwriting overlaps."""
+        if end <= start:
+            raise ValueError("empty insert")
+        i = self._first_overlap_idx(start, end)
+        new_pieces: List[Interval] = []
+        # Remove every overlapped interval, keeping the uncovered flanks.
+        j = i
+        while j < len(self._ivals) and self._ivals[j].start < end:
+            iv = self._ivals[j]
+            if iv.overlaps(start, end):
+                if iv.start < start:  # left flank survives (split)
+                    new_pieces.append(Interval(iv.start, start, iv.value))
+                if iv.end > end:  # right flank survives (split)
+                    new_pieces.append(
+                        Interval(
+                            end, iv.end,
+                            self._shift_value(iv.value, end - iv.start),
+                        )
+                    )
+            else:
+                new_pieces.append(iv)
+            j += 1
+        new_pieces.append(Interval(start, end, value))
+        new_pieces.sort(key=lambda v: v.start)
+        self._ivals[i:j] = new_pieces
+        self._starts[i:j] = [iv.start for iv in new_pieces]
+        if self._merge:
+            self._merge_around(i, i + len(new_pieces))
+
+    def remove(self, start: int, end: int) -> List[Interval]:
+        """Remove coverage of [start, end); returns the removed (clipped) parts."""
+        if end <= start:
+            return []
+        removed = self.query(start, end)
+        if not removed:
+            return []
+        i = self._first_overlap_idx(start, end)
+        new_pieces: List[Interval] = []
+        j = i
+        while j < len(self._ivals) and self._ivals[j].start < end:
+            iv = self._ivals[j]
+            if iv.overlaps(start, end):
+                if iv.start < start:
+                    new_pieces.append(Interval(iv.start, start, iv.value))
+                if iv.end > end:
+                    new_pieces.append(
+                        Interval(
+                            end, iv.end,
+                            self._shift_value(iv.value, end - iv.start),
+                        )
+                    )
+            else:
+                new_pieces.append(iv)
+            j += 1
+        self._ivals[i:j] = new_pieces
+        self._starts[i:j] = [iv.start for iv in new_pieces]
+        return removed
+
+    def _merge_around(self, lo: int, hi: int) -> None:
+        """Merge contiguous equal-valued intervals in a window around [lo, hi)."""
+        lo = max(lo - 1, 0)
+        hi = min(hi + 1, len(self._ivals))
+        k = lo
+        while k < min(hi, len(self._ivals)) - 1:
+            a, b = self._ivals[k], self._ivals[k + 1]
+            if a.end == b.start and a.value == b.value:
+                self._ivals[k] = Interval(a.start, b.end, a.value)
+                del self._ivals[k + 1]
+                del self._starts[k + 1]
+                hi -= 1
+            else:
+                k += 1
+
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self) -> None:
+        """Disjoint, sorted, starts-index consistent (used by property tests)."""
+        assert self._starts == [iv.start for iv in self._ivals]
+        for a, b in zip(self._ivals, self._ivals[1:]):
+            assert a.end <= b.start, f"overlap: {a} vs {b}"
+            if self._merge:
+                assert not (a.end == b.start and a.value == b.value), (
+                    f"unmerged neighbours: {a} vs {b}"
+                )
+
+    @property
+    def max_end(self) -> int:
+        return max((iv.end for iv in self._ivals), default=0)
+
+
+class OwnerIntervalMap(IntervalMap):
+    """Global (server-side) tree: range -> owner client id (paper §5.1.2)."""
+
+    def attach(self, start: int, end: int, owner: int) -> None:
+        self.insert(start, end, owner)
+
+    def detach(self, start: int, end: int, owner: int) -> bool:
+        """Detach only the sub-ranges still owned by ``owner``.
+
+        Per the paper: if another client has overwritten (re-attached) the
+        range, the detach of the stale parts is a no-op.  Returns True if
+        anything was removed.
+        """
+        stale = [iv for iv in self.query(start, end) if iv.value == owner]
+        for iv in stale:
+            self.remove(iv.start, iv.end)
+        return bool(stale)
+
+    def owners(self, start: int, end: int) -> List[Interval]:
+        return self.query(start, end)
+
+
+@dataclass(frozen=True)
+class BufferSlot:
+    """Payload of the local tree: where a file range lives in the burst buffer."""
+
+    buf_start: int
+    attached: bool
+
+    def shifted(self, delta: int) -> "BufferSlot":
+        return BufferSlot(self.buf_start + delta, self.attached)
+
+
+class BufferIntervalMap(IntervalMap):
+    """Local (client-side) tree: file range -> burst-buffer position.
+
+    Each interval value is a :class:`BufferSlot`.  Values are *not* merged by
+    equality (buffer offsets differ per write); instead we merge only when the
+    buffer ranges are also contiguous, mirroring the paper's local tree.
+    """
+
+    def __init__(self) -> None:
+        super().__init__(merge_values=False)
+
+    def _shift_value(self, value: "BufferSlot", delta: int) -> "BufferSlot":
+        return value.shifted(delta)
+
+    def record_write(self, start: int, end: int, buf_start: int) -> None:
+        self.insert(start, end, BufferSlot(buf_start, attached=False))
+        self._merge_contiguous()
+
+    def _merge_contiguous(self) -> None:
+        k = 0
+        while k < len(self._ivals) - 1:
+            a, b = self._ivals[k], self._ivals[k + 1]
+            va, vb = a.value, b.value
+            if (
+                a.end == b.start
+                and va.attached == vb.attached
+                and va.buf_start + a.length == vb.buf_start
+            ):
+                self._ivals[k] = Interval(a.start, b.end, va)
+                del self._ivals[k + 1]
+                del self._starts[k + 1]
+            else:
+                k += 1
+
+    def mark_attached(self, start: int, end: int) -> None:
+        """Flip ``attached`` on every written sub-range of [start, end)."""
+        runs = self.buffer_runs(start, end)  # snapshot before mutating
+        for fs, fe, bs in runs:
+            self.insert(fs, fe, BufferSlot(bs, True))
+        self._merge_contiguous()
+
+    def lookup_interval(self, pos: int) -> Interval:
+        i = bisect.bisect_right(self._starts, pos) - 1
+        if i >= 0 and self._ivals[i].start <= pos < self._ivals[i].end:
+            return self._ivals[i]
+        raise KeyError(pos)
+
+    def written(self, start: int, end: int) -> bool:
+        return self.covers(start, end)
+
+    def buffer_runs(
+        self, start: int, end: int, attached: Optional[bool] = None
+    ) -> List[Tuple[int, int, int]]:
+        """(file_start, file_end, buf_start) runs covering written parts.
+
+        ``attached`` filters to runs with that attach status when not None.
+        """
+        out = []
+        for iv in self.query(start, end):
+            base = self.lookup_interval(iv.start)
+            slot: BufferSlot = base.value
+            if attached is not None and slot.attached != attached:
+                continue
+            out.append(
+                (iv.start, iv.end, slot.buf_start + (iv.start - base.start))
+            )
+        return out
+
+    def unattached_runs(self) -> List[Tuple[int, int, int]]:
+        return [
+            (iv.start, iv.end, iv.value.buf_start)
+            for iv in self._ivals
+            if not iv.value.attached
+        ]
+
+    def attached_runs(self) -> List[Tuple[int, int, int]]:
+        return [
+            (iv.start, iv.end, iv.value.buf_start)
+            for iv in self._ivals
+            if iv.value.attached
+        ]

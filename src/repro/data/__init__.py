@@ -1,0 +1,6 @@
+"""Training-data ingestion through the consistency layer (paper §6.3)."""
+
+from repro.data.dlio import PreloadedStore
+from repro.data.pipeline import TokenPipeline, synthetic_batch
+
+__all__ = ["PreloadedStore", "TokenPipeline", "synthetic_batch"]

@@ -1,0 +1,228 @@
+"""Synthetic N-to-1 parallel I/O workloads (paper §6.1, Tables 7 & 8).
+
+Every workload writes and/or reads ONE shared file.  The write phase (if
+any) completes before the read phase begins (global barrier = ledger phase
+marker).  Patterns:
+
+* ``contig``  — rank ``i`` owns the contiguous block ``[i*m*s, (i+1)*m*s)``.
+* ``strided`` — access ``j`` of rank ``i`` goes to offset ``(j*R + i) * s``.
+* ``random``  — a seeded permutation of all written blocks is dealt to the
+  readers (the DL ingestion pattern, §6.3).
+
+Each workload runs on a consistency layer from
+:mod:`repro.core.consistency`; per Table 6 the ONLY difference between the
+runs is the placement of ``attach``/``query`` primitives.  Reads are
+verified against the deterministic write pattern, so every benchmark run
+is also an end-to-end correctness check of the consistency layer.
+"""
+
+from __future__ import annotations
+
+import random as _random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.basefs import BaseFS, EventKind
+from repro.core.consistency import FileHandle, make_fs
+from repro.core.costmodel import CostModel, HardwareConstants, PhaseResult
+
+SHARED_FILE = "/shared/workload.dat"
+
+
+def pattern_bytes(offset: int, size: int) -> bytes:
+    """Deterministic, offset-addressed fill so any read is verifiable."""
+    # One cheap byte per position; block-structure keeps it fast for 8MB ops.
+    head = (offset * 2654435761) & 0xFF
+    body = bytes(((offset >> 3) + i) & 0xFF for i in range(min(size, 64)))
+    reps = size // len(body) + 1 if body else 0
+    return (bytes([head]) + (body * reps))[:size] if size else b""
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    """Table 7 parameters + Table 8 phase patterns."""
+
+    name: str
+    model: str                      # consistency layer: commit|session|posix|mpiio
+    write_pattern: Optional[str]    # contig | strided | None
+    read_pattern: Optional[str]     # contig | strided | random | None
+    n_w: int                        # writing nodes
+    n_r: int                        # reading nodes
+    p: int = 12                     # processes per node
+    m_w: int = 10                   # writes per writing process
+    m_r: int = 10                   # reads per reading process
+    s: int = 8 * 1024               # access size (8KB small / 8MB large)
+    seed: int = 0                   # for random read assignment
+
+    @property
+    def n(self) -> int:
+        return self.n_w + self.n_r
+
+    @property
+    def writers(self) -> int:
+        return self.n_w * self.p
+
+    @property
+    def readers(self) -> int:
+        return self.n_r * self.p
+
+
+# ---- Table 8 factories ----------------------------------------------------
+def cn_w(n: int, s: int, model: str, p: int = 12, m: int = 10) -> WorkloadConfig:
+    return WorkloadConfig(f"CN-W/{model}", model, "contig", None, n, 0, p, m, m, s)
+
+
+def sn_w(n: int, s: int, model: str, p: int = 12, m: int = 10) -> WorkloadConfig:
+    return WorkloadConfig(f"SN-W/{model}", model, "strided", None, n, 0, p, m, m, s)
+
+
+def cc_r(n: int, s: int, model: str, p: int = 12, m: int = 10) -> WorkloadConfig:
+    return WorkloadConfig(
+        f"CC-R/{model}", model, "contig", "contig", n // 2, n // 2, p, m, m, s
+    )
+
+
+def cs_r(n: int, s: int, model: str, p: int = 12, m: int = 10) -> WorkloadConfig:
+    return WorkloadConfig(
+        f"CS-R/{model}", model, "contig", "strided", n // 2, n // 2, p, m, m, s
+    )
+
+
+def rn_r(n: int, s: int, model: str, p: int = 12, m: int = 10,
+         seed: int = 0) -> WorkloadConfig:
+    """Random read-after-write (the DL-style access pattern within §6.1)."""
+    return WorkloadConfig(
+        f"RN-R/{model}", model, "contig", "random", n // 2, n // 2, p, m, m,
+        s, seed
+    )
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class WorkloadResult:
+    config: WorkloadConfig
+    phases: List[PhaseResult]
+    verified_reads: int = 0
+    rpc_counts: Dict[str, int] = field(default_factory=dict)
+
+    def phase(self, name: str) -> PhaseResult:
+        for ph in self.phases:
+            if ph.name == name:
+                return ph
+        raise KeyError(name)
+
+    @property
+    def write_bandwidth(self) -> float:
+        return self.phase("write").io_bandwidth
+
+    @property
+    def read_bandwidth(self) -> float:
+        return self.phase("read").io_bandwidth
+
+
+def _write_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
+    if cfg.write_pattern == "contig":
+        base = rank * cfg.m_w * cfg.s
+        return [base + j * cfg.s for j in range(cfg.m_w)]
+    if cfg.write_pattern == "strided":
+        return [(j * cfg.writers + rank) * cfg.s for j in range(cfg.m_w)]
+    raise ValueError(cfg.write_pattern)
+
+
+def _read_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
+    if cfg.read_pattern == "contig":
+        base = rank * cfg.m_r * cfg.s
+        return [base + j * cfg.s for j in range(cfg.m_r)]
+    if cfg.read_pattern == "strided":
+        return [(j * cfg.readers + rank) * cfg.s for j in range(cfg.m_r)]
+    if cfg.read_pattern == "random":
+        blocks = list(range(cfg.writers * cfg.m_w))
+        _random.Random(cfg.seed).shuffle(blocks)
+        mine = blocks[rank * cfg.m_r : (rank + 1) * cfg.m_r]
+        return [b * cfg.s for b in mine]
+    raise ValueError(cfg.read_pattern)
+
+
+def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
+                 hw: Optional[HardwareConstants] = None,
+                 verify: bool = True) -> WorkloadResult:
+    """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
+
+    The file system is purged before each run (paper §6.1): a fresh BaseFS
+    per call unless the caller passes one in.
+    """
+    fs = fs or BaseFS()
+    layer = make_fs(cfg.model, fs)
+    ledger = fs.ledger
+
+    # ---- write phase ----------------------------------------------------
+    # Opens (and the writers' session_open on the empty file) happen in
+    # the setup region, OUTSIDE the timed phase — IOR-style methodology,
+    # and the paper's own note that "session_open became a no-op" for the
+    # empty file (§6.1.1).  commit/close/sync stay inside: they ARE the
+    # consistency-model cost of the write path.
+    handles: Dict[int, FileHandle] = {}
+    if cfg.write_pattern:
+        for rank in range(cfg.writers):
+            node = rank // cfg.p
+            fh = layer.open(rank, SHARED_FILE, node=node)
+            handles[rank] = fh
+            if cfg.model == "session":
+                layer.session_open(fh)  # no-op query on the empty file
+        ledger.mark_phase("write")
+        # Interleave write ops round-robin over ranks: the DES reconstructs
+        # true concurrency from per-client chains; round-robin issue also
+        # exercises the server under the paper's concurrent arrival order.
+        offsets = {r: _write_offsets(cfg, r) for r in range(cfg.writers)}
+        for j in range(cfg.m_w):
+            for rank in range(cfg.writers):
+                fh = handles[rank]
+                off = offsets[rank][j]
+                layer.seek(fh, off)
+                layer.write(fh, pattern_bytes(off, cfg.s))
+        for rank in range(cfg.writers):
+            fh = handles[rank]
+            if cfg.model == "commit":
+                layer.commit(fh)
+            elif cfg.model == "session":
+                layer.session_close(fh)
+            elif cfg.model == "mpiio":
+                layer.file_sync(fh)
+            # posix: writes already attached.
+
+    # ---- read phase ------------------------------------------------------
+    verified = 0
+    if cfg.read_pattern:
+        ledger.mark_phase("read")
+        rhandles: Dict[int, FileHandle] = {}
+        for r in range(cfg.readers):
+            cid = cfg.writers + r
+            node = cfg.n_w + r // cfg.p
+            fh = layer.open(cid, SHARED_FILE, node=node)
+            rhandles[r] = fh
+            if cfg.model == "session":
+                layer.session_open(fh)
+            elif cfg.model == "mpiio":
+                layer.file_sync(fh)
+        roffsets = {r: _read_offsets(cfg, r) for r in range(cfg.readers)}
+        for j in range(cfg.m_r):
+            for r in range(cfg.readers):
+                fh = rhandles[r]
+                off = roffsets[r][j]
+                layer.seek(fh, off)
+                data = layer.read(fh, cfg.s)
+                if verify:
+                    assert data == pattern_bytes(off, cfg.s), (
+                        f"{cfg.name}: read mismatch at offset {off}"
+                    )
+                    verified += 1
+        for r in range(cfg.readers):
+            if cfg.model == "session":
+                layer.session_close(rhandles[r])
+
+    phases = CostModel(hw).replay(ledger)
+    rpc_counts = {
+        t: ledger.count(EventKind.RPC, t)
+        for t in ("attach", "query", "detach", "stat")
+    }
+    return WorkloadResult(cfg, phases, verified, rpc_counts)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: symmetric per-row int8 quantization.
+
+Used by the gradient-compression path (:mod:`repro.train.grad_compress`)
+to shrink cross-pod (DCN) gradient all-reduces 4x (bf16->int8+scale).
+One row block per grid step; amax reduction and scaling stay in VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                     # (Rb, C)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)      # (Rb, 1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def quantize_pallas(x: jax.Array, *, block_rows: int = 256,
+                    interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, C) -> (int8 (R, C), fp32 scales (R, 1))."""
+    R, C = x.shape
+    block_rows = min(block_rows, R)
+    nr = -(-R // block_rows)
+    Rp = nr * block_rows
+    xp = jnp.pad(x, ((0, Rp - R), (0, 0)))
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nr,),
+        in_specs=[pl.BlockSpec((block_rows, C), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, C), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, C), jnp.int8),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(xp)
+    return q[:R], s[:R]

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every kernel in :mod:`repro.kernels`.
+
+These are the correctness references: small-shape, full-materialization,
+no tiling.  Kernel sweep tests assert ``assert_allclose(kernel, ref)``
+over shapes × dtypes; the model code itself calls the memory-efficient
+implementations in :mod:`repro.kernels.ops`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Full softmax attention.  q: (B,T,H,D); k,v: (B,S,K,D) with H%K==0."""
+    B, T, H, D = q.shape
+    Bk, S, K, _ = k.shape
+    rep = H // K
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(T)[:, None] + (S - T)     # align last q with last k
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)          # fully-masked rows
+    out = jnp.einsum("bhts,bshd->bthd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, D: jax.Array,
+                 h0: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba1 selective scan, sequential oracle.
+
+    x, dt: (Bt, T, I);  A: (I, N);  B, C: (Bt, T, N);  D: (I,)
+    Discretization (ZOH): hbar_t = exp(dt*A) h + dt * B_t * x_t
+    y_t = C_t . h_t + D * x_t.  Returns (y (Bt,T,I), h_T (Bt,I,N)).
+    """
+    Bt, T, I = x.shape
+    N = A.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A[None, None])          # (Bt,T,I,N)
+    dBx = dtf[..., None] * Bf[:, :, None, :] * xf[..., None]
+
+    def step(h, t):
+        h = dA[:, t] * h + dBx[:, t]                      # (Bt,I,N)
+        y = jnp.einsum("bin,bn->bi", h, Cf[:, t])
+        return h, y
+
+    h = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((Bt, I, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h, jnp.arange(T))
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None].astype(jnp.float32)
+    return y.astype(x.dtype), h
+
+
+def rglru_ref(x: jax.Array, a_gate: jax.Array, i_gate: jax.Array,
+              log_lam: jax.Array, h0: Optional[jax.Array] = None,
+              c: float = 8.0) -> Tuple[jax.Array, jax.Array]:
+    """RG-LRU oracle (Griffin eq. 3-4).
+
+    x, a_gate, i_gate: (B, T, L) — gates are *pre-sigmoid* activations.
+    h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(log_lam) * sigmoid(a_gate_t)).
+    Returns (h sequence (B,T,L), h_T (B,L)).
+    """
+    B, T, L = x.shape
+    xf = x.astype(jnp.float32)
+    lam = jax.nn.softplus(log_lam.astype(jnp.float32))
+    log_a = -c * lam[None, None] * jax.nn.sigmoid(a_gate.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i_gate.astype(jnp.float32)) * xf
+    # sqrt(1 - a^2) computed in log space for stability
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    inp = mult * gated
+
+    def step(h, t):
+        h = a[:, t] * h + inp[:, t]
+        return h, h
+
+    h = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((B, L), jnp.float32)
+    h, hs = jax.lax.scan(step, h, jnp.arange(T))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), h
+
+
+def quantize_ref(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization oracle. Returns (q, scales)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the RG-LRU gated linear recurrence.
+
+Channels tile across the parallel grid; time runs sequentially on the
+innermost grid axis with the hidden state in VMEM scratch.  All gate
+math is fp32 inside the kernel regardless of the I/O dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(x_ref, ag_ref, ig_ref, lam_ref, y_ref, hout_ref, h_ref, *,
+                  c: float, time_chunk: int, nt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)            # (Tc, Lc)
+    ag = ag_ref[0].astype(jnp.float32)
+    ig = ig_ref[0].astype(jnp.float32)
+    lam = jax.nn.softplus(lam_ref[...].astype(jnp.float32))   # (1, Lc)
+    log_a = -c * lam * jax.nn.sigmoid(ag)                     # (Tc, Lc)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    inp = mult * jax.nn.sigmoid(ig) * x
+
+    def step(t, carry):
+        h, ys = carry
+        h = a[t] * h + inp[t]                                 # (Lc,)
+        ys = jax.lax.dynamic_update_index_in_dim(ys, h, t, 0)
+        return h, ys
+
+    h0 = h_ref[0]
+    ys0 = jnp.zeros_like(x)
+    h, ys = jax.lax.fori_loop(0, time_chunk, step, (h0, ys0))
+    h_ref[0, ...] = h
+    y_ref[0, ...] = ys.astype(y_ref.dtype)
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        hout_ref[0, ...] = h_ref[0].astype(hout_ref.dtype)
+
+
+def rglru_pallas(x: jax.Array, a_gate: jax.Array, i_gate: jax.Array,
+                 log_lam: jax.Array, h0: Optional[jax.Array] = None, *,
+                 c: float = 8.0, block_l: int = 256, time_chunk: int = 16,
+                 interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Shapes as :func:`repro.kernels.ref.rglru_ref` (h0 must be None)."""
+    assert h0 is None, "pallas path starts from zero state"
+    B, T, L = x.shape
+    block_l = min(block_l, L)
+    time_chunk = min(time_chunk, T)
+    nl = -(-L // block_l)
+    nt = -(-T // time_chunk)
+    Lp, Tp = nl * block_l, nt * time_chunk
+    pad3 = ((0, 0), (0, Tp - T), (0, Lp - L))
+    xp = jnp.pad(x, pad3)
+    agp = jnp.pad(a_gate, pad3)
+    igp = jnp.pad(i_gate, pad3)
+    lamp = jnp.pad(log_lam, ((0, Lp - L),))[None, :]          # (1, Lp)
+
+    kernel = functools.partial(_rglru_kernel, c=c, time_chunk=time_chunk,
+                               nt=nt)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, nl, nt),
+        in_specs=[
+            pl.BlockSpec((1, time_chunk, block_l), lambda b, i, t: (b, t, i)),
+            pl.BlockSpec((1, time_chunk, block_l), lambda b, i, t: (b, t, i)),
+            pl.BlockSpec((1, time_chunk, block_l), lambda b, i, t: (b, t, i)),
+            pl.BlockSpec((1, block_l), lambda b, i, t: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, time_chunk, block_l), lambda b, i, t: (b, t, i)),
+            pl.BlockSpec((1, block_l), lambda b, i, t: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tp, Lp), x.dtype),
+            jax.ShapeDtypeStruct((B, Lp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_l), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, agp, igp, lamp)
+    return y[:, :T, :L], hT[:, :L]

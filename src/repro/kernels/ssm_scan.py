@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the mamba1 selective scan.
+
+TPU adaptation: the CUDA selective-scan kernel keeps per-thread state in
+registers and parallelizes over channels within a block; on TPU we tile
+channels (I) across the parallel grid and walk time chunks sequentially
+on the innermost grid axis, carrying the (block_i × N) state in VMEM
+scratch.  The (Tc × block_i × N) discretized tensors exist only inside
+one grid step, so HBM traffic is O(T·I) instead of O(T·I·N).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                time_chunk: int, nt: int, seq: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Tc, Ic)
+    dt = dt_ref[0].astype(jnp.float32)        # (Tc, Ic)
+    A = a_ref[...].astype(jnp.float32)        # (Ic, N)
+    Bm = b_ref[0].astype(jnp.float32)         # (Tc, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Tc, N)
+
+    dA = jnp.exp(dt[:, :, None] * A[None])                    # (Tc,Ic,N)
+    dBx = dt[:, :, None] * Bm[:, None, :] * x[:, :, None]
+
+    def step(t, carry):
+        h, ys = carry
+        h = dA[t] * h + dBx[t]                                 # (Ic,N)
+        y = (h * Cm[t][None, :]).sum(axis=1)                   # (Ic,)
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return h, ys
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros((time_chunk, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, time_chunk, step, (h0, ys0))
+    h_ref[...] = h
+    y_ref[0, ...] = ys.astype(y_ref.dtype)
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        hout_ref[0, ...] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssm_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, D: jax.Array,
+                    h0: Optional[jax.Array] = None, *,
+                    block_i: int = 256, time_chunk: int = 16,
+                    interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Shapes as :func:`repro.kernels.ref.ssm_scan_ref` (h0 must be None)."""
+    assert h0 is None, "pallas path starts from zero state"
+    Bt, T, I = x.shape
+    N = A.shape[1]
+    block_i = min(block_i, I)
+    time_chunk = min(time_chunk, T)
+    ni = -(-I // block_i)
+    nt = -(-T // time_chunk)
+    Ip, Tp = ni * block_i, nt * time_chunk
+    xp = jnp.pad(x, ((0, 0), (0, Tp - T), (0, Ip - I)))
+    dtp = jnp.pad(dt, ((0, 0), (0, Tp - T), (0, Ip - I)))
+    Ap = jnp.pad(A, ((0, Ip - I), (0, 0)))
+    Bp = jnp.pad(B, ((0, 0), (0, Tp - T), (0, 0)))
+    Cp = jnp.pad(C, ((0, 0), (0, Tp - T), (0, 0)))
+
+    kernel = functools.partial(_ssm_kernel, time_chunk=time_chunk, nt=nt,
+                               seq=T)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(Bt, ni, nt),
+        in_specs=[
+            pl.BlockSpec((1, time_chunk, block_i), lambda b, i, t: (b, t, i)),
+            pl.BlockSpec((1, time_chunk, block_i), lambda b, i, t: (b, t, i)),
+            pl.BlockSpec((block_i, N), lambda b, i, t: (i, 0)),
+            pl.BlockSpec((1, time_chunk, N), lambda b, i, t: (b, t, 0)),
+            pl.BlockSpec((1, time_chunk, N), lambda b, i, t: (b, t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, time_chunk, block_i), lambda b, i, t: (b, t, i)),
+            pl.BlockSpec((1, block_i, N), lambda b, i, t: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, Tp, Ip), x.dtype),
+            jax.ShapeDtypeStruct((Bt, Ip, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_i, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, dtp, Ap, Bp, Cp)
+    y = y[:, :T, :I] + (x.astype(jnp.float32)
+                        * D[None, None].astype(jnp.float32)).astype(x.dtype)
+    return y, hT[:, :I]

@@ -1,0 +1,378 @@
+"""Compiled-HLO analysis: collective wire-bytes with while-loop unrolling.
+
+``compiled.cost_analysis()`` counts a while body ONCE regardless of trip
+count (verified empirically — a length-10 scan reports 10x fewer FLOPs
+than its unrolled twin), and it reports nothing about collectives.  This
+module fixes both for the §Roofline collective term:
+
+* the module text is split into computations;
+* ``while`` instructions give a call graph; each body's execution
+  multiplicity is the product of enclosing trip counts (trip count = the
+  max ``s32[] constant(N)`` in the loop's condition computation — the
+  canonical upper bound of a jax scan);
+* every ``all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute`` instruction contributes ring-model WIRE bytes per
+  device (e.g. all-reduce = 2·bytes·(g-1)/g), scaled by multiplicity.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^,]*\}|\[\d+,\d+\])")
+
+
+def _shape_bytes(shape_expr: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_expr):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("[{") or g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    m2 = re.match(r"\[(\d+),(\d+)\]", g)
+    if m2:
+        return int(m2.group(2))
+    return default
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    """Ring-model per-device wire traffic vs the instruction's OUTPUT bytes.
+
+    HLO output shapes: all-gather/all-reduce outputs are full-size;
+    reduce-scatter's output is the 1/g shard (so wire = out·(g-1)).
+    """
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)
+    if kind in ("all-gather", "all-to-all"):
+        return (g - 1) / g
+    return 1.0  # collective-permute
+
+
+def split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if "ENTRY" in line.split("(")[0]:
+                    comps["__entry__"] = comps[cur]
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _find_entry(text: str) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)\s*\(", text)
+    return m.group(1) if m else None
+
+
+def computation_multiplicity(text: str) -> Dict[str, int]:
+    """name -> number of executions implied by while-loop nesting."""
+    comps = split_computations(text)
+    entry = _find_entry(text)
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int) -> None:
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + m
+        for line in comps[name]:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                trips = [int(t) for t in _TRIP_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip = max(trips) if trips else 1
+                visit(body, m * trip)
+                visit(cond, m * (trip + 1))
+            else:
+                c = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+                if c and "fusion(" not in line and "reduce(" not in line:
+                    visit(c.group(1), m)
+
+    if entry:
+        visit(entry, 1)
+    return mult
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0              # ring-model bytes/device, unrolled
+    payload_bytes: float = 0.0           # raw payload bytes, unrolled
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    count: int = 0                       # static instruction count
+    dynamic_count: float = 0.0           # multiplicity-weighted
+
+
+def parse_collectives(text: str, default_group: int = 1) -> CollectiveStats:
+    comps = split_computations(text)
+    mult = computation_multiplicity(text)
+    stats = CollectiveStats()
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1)
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            shape_expr, kind = cm.group(1), cm.group(2)
+            payload = _shape_bytes(shape_expr)
+            g = _group_size(line, default_group)
+            wire = payload * _wire_factor(kind, g)
+            stats.count += 1
+            stats.dynamic_count += m
+            stats.payload_bytes += payload * m
+            stats.wire_bytes += wire * m
+            stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire * m
+    return stats
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\([^=]*?\)|[\w\[\],{}]+)\s+"      # output type (possibly a tuple)
+    r"([\w\-]+)\(")                          # opcode
+_HEADER_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_HEADER_PARAM_RE = re.compile(
+    r"%?([\w.\-]+):\s*((?:\([^)]*\))|[\w\[\],{}/]+)")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+#: Opcodes whose operand/output bytes are NOT top-level HBM traffic.
+_FREE_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota",
+    "partition-id", "replica-id", "rng-bit-generator", "custom-call",
+})
+
+
+def _operand_section(line: str, opcode: str) -> str:
+    """Text between the opcode's '(' and its matching ')'."""
+    try:
+        rest = line.split(opcode + "(", 1)[1]
+    except IndexError:
+        return ""
+    depth, out = 1, []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out.append(ch)
+    return "".join(out)
+
+
+def _type_dims(type_str: str):
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _computation_tables(text):
+    """{comp: (symbol_table name->type, [(name, type, opcode, line)])}."""
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            h = _HEADER_RE.match(line)
+            if h and line.rstrip().endswith("{"):
+                cur = h.group(1)
+                symbols = {}
+                for pname, ptype in _HEADER_PARAM_RE.findall(h.group(2)):
+                    symbols[pname] = ptype
+                comps[cur] = (symbols, [])
+        else:
+            if line.strip() == "}":
+                cur = None
+                continue
+            d = _DEF_RE.match(line)
+            if d:
+                name, otype, opcode = d.group(1), d.group(2), d.group(3)
+                comps[cur][0][name] = otype
+                comps[cur][1].append((name, otype, opcode, line))
+    return comps
+
+
+def _dot_flops(line: str, out_type: str, symbols) -> float:
+    """2 * prod(out dims) * prod(contracted lhs dims) for one dot."""
+    args = _operand_section(line, "dot")
+    names = _OPERAND_NAME_RE.findall(args)
+    if not names:
+        return 0.0
+    lhs_dims = _type_dims(symbols.get(names[0], ""))
+    mc = _LHS_CONTRACT_RE.search(line)
+    contract = 1
+    if mc and mc.group(1):
+        for i in mc.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    out_elems = 1
+    od = _type_dims(out_type)
+    for d in od:
+        out_elems *= d
+    return 2.0 * out_elems * contract
+
+
+def parse_hlo_costs(text: str) -> Dict[str, float]:
+    """Unrolled per-device dot-FLOPs and HBM-traffic bytes from HLO text.
+
+    ``cost_analysis()`` counts every while body ONCE; here each reachable
+    computation's instructions are weighted by its execution multiplicity
+    (product of enclosing scan trip counts).  FLOPs: matmuls only (dot
+    ops, incl. dots fused into kOutput fusions).  Bytes: post-fusion HBM
+    traffic — output + operand buffer bytes per top-level instruction,
+    with in-place semantics for (dynamic-)slice/update ops (only the
+    slice moves, not the aliased full buffer).
+    """
+    tables = _computation_tables(text)
+    mult = computation_multiplicity(text)
+    fusion_mult: Dict[str, float] = {}
+    flops = flops_raw = bytes_ = 0.0
+
+    def fusion_param_bytes(body: str, nparams: int, otype: str):
+        """Per-parameter accessed bytes + effective output bytes of a fusion.
+
+        A parameter whose every use inside the body is a (dynamic-)slice /
+        gather is only read at slice granularity; a parameter feeding a
+        dynamic-update-slice at operand 0 aliases the output in place (0
+        bytes read).  If the body ROOT is a dynamic-update-slice, only the
+        update window is written, not the whole buffer.
+        """
+        symbols, instrs = tables.get(body, ({}, []))
+        reads: Dict[str, float] = {}
+        out_b = _shape_bytes(otype)
+        param_of: Dict[str, str] = {}
+        for iname, ptype, opcode, line in instrs:
+            if opcode == "parameter":
+                param_of[iname] = ptype
+                reads[iname] = 0.0
+        for iname, ptype, opcode, line in instrs:
+            if opcode == "parameter":
+                continue
+            args = _operand_section(line, opcode)
+            names = _OPERAND_NAME_RE.findall(args)
+            for pos, n in enumerate(names):
+                if n not in param_of:
+                    continue
+                full = _shape_bytes(param_of[n])
+                if opcode in ("dynamic-slice", "slice", "gather"):
+                    acc = _shape_bytes(ptype)       # the slice produced
+                elif opcode == "dynamic-update-slice" and pos == 0:
+                    acc = 0.0                        # in-place alias
+                else:
+                    acc = full
+                reads[n] = max(reads[n], min(acc, full))
+            if opcode == "dynamic-update-slice" and "ROOT" in line:
+                upd = names[1] if len(names) > 1 else None
+                upd_b = _shape_bytes(symbols.get(upd, "")) if upd else 0
+                if upd in param_of:
+                    upd_b = _shape_bytes(param_of[upd])
+                out_b = min(out_b, 2 * upd_b)       # write update window
+        return sum(reads.values()), out_b
+
+    def op_bytes(opcode, otype, line, symbols) -> float:
+        out_b = _shape_bytes(otype)
+        args = _operand_section(line, opcode)
+        names = _OPERAND_NAME_RE.findall(args)
+        opnd_b = [
+            _shape_bytes(symbols.get(n, "")) for n in names
+        ]
+        if opcode in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out_b          # read slice + write slice
+        if opcode == "dynamic-update-slice":
+            small = sum(b for b in opnd_b if b < out_b)
+            return 2.0 * small           # in-place update window
+        if opcode == "fusion":
+            cm = _CALLS_RE.search(line)
+            if cm and cm.group(1) in tables:
+                r, o = fusion_param_bytes(cm.group(1), len(names), otype)
+                return r + o
+        return out_b + sum(opnd_b)
+
+    for name, (symbols, instrs) in tables.items():
+        if name not in mult:
+            continue
+        m = mult[name]
+        for iname, otype, opcode, line in instrs:
+            if opcode == "dot":
+                f = _dot_flops(line, otype, symbols)
+                flops += f * m
+                flops_raw += f
+            if opcode == "fusion":
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    fusion_mult[cm.group(1)] = (
+                        fusion_mult.get(cm.group(1), 0.0) + m)
+            if opcode in _FREE_OPS:
+                continue
+            bytes_ += op_bytes(opcode, otype, line, symbols) * m
+    # Dots fused into fusion bodies (kOutput fusions on some backends).
+    for name, m in fusion_mult.items():
+        symbols, instrs = tables.get(name, ({}, []))
+        for iname, otype, opcode, line in instrs:
+            if opcode == "dot":
+                f = _dot_flops(line, otype, symbols)
+                flops += f * m
+                flops_raw += f
+    return {"flops": flops, "bytes": bytes_, "flops_raw": flops_raw}
+
+
+def unrolled_cost(cost: Dict[str, float], text: str) -> Dict[str, float]:
+    """Scale cost_analysis flops/bytes by while multiplicities.
+
+    XLA's cost analysis counts each while body once.  We cannot re-walk
+    per-instruction costs from text alone, so we apply a first-order
+    correction: measure each while body's share via a second analysis is
+    unavailable on CPU — instead the dry-run reports BOTH the raw numbers
+    and the model-analytic FLOPs; the roofline uses the analytic compute
+    term cross-checked against a small-depth unrolled lowering.
+    """
+    return dict(cost)

@@ -1,0 +1,27 @@
+"""Model substrate: composable JAX definitions for the 10 assigned archs.
+
+Everything is pure-functional: ``init_*`` builds a parameter pytree (or an
+abstract one under ``jax.eval_shape``), ``*_forward`` applies it.  Layer
+stacks are grouped into *super-blocks* (one period of the arch's block
+pattern) and scanned with ``jax.lax.scan`` so HLO size stays flat in depth.
+
+Sharding is expressed as a parallel pytree of ``PartitionSpec`` built by
+:func:`repro.models.transformer.param_specs`; the launcher binds it to a
+concrete mesh.
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_params,
+    param_specs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "param_specs",
+    "forward",
+    "decode_step",
+]

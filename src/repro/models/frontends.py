@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per the assignment: backbone only).
+
+``[audio]`` (whisper) and ``[vlm]`` (paligemma) archs take precomputed
+frame / patch embeddings as inputs; the conv-frontend / SigLIP tower is
+out of scope.  These helpers produce either concrete random embeddings
+(smoke tests, examples) or abstract stand-ins (dry-run ``input_specs``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def audio_frames(cfg: ModelConfig, batch: int, *, key=None):
+    shape = (batch, cfg.enc_len, cfg.d_model)
+    if key is None:
+        return jax.ShapeDtypeStruct(shape, cfg.dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(cfg.dtype)
+
+
+def vision_patches(cfg: ModelConfig, batch: int, *, key=None):
+    shape = (batch, cfg.vision_patches, cfg.d_model)
+    if key is None:
+        return jax.ShapeDtypeStruct(shape, cfg.dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(cfg.dtype)
+
+
+def extra_inputs(cfg: ModelConfig, batch: int, *, key=None) -> dict:
+    """The non-token inputs an arch needs, keyed by forward()'s kwarg name."""
+    if cfg.frontend == "audio":
+        return {"frames": audio_frames(cfg, batch, key=key)}
+    if cfg.frontend == "vision":
+        return {"patches": vision_patches(cfg, batch, key=key)}
+    return {}

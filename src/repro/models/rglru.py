@@ -1,0 +1,100 @@
+"""RecurrentGemma recurrent block: conv + RG-LRU gated linear recurrence.
+
+Griffin-style: x -> two branches; branch 1: linear -> GeLU (gate);
+branch 2: linear -> causal conv (width 4) -> RG-LRU; merge by product ->
+out projection.  Decode state = (conv window, lru hidden) — O(1) in
+context, which is why recurrentgemma runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense
+
+Params = Dict[str, Any]
+CONV_W = 4
+
+
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    D, L = cfg.d_model, cfg.lru
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a ~ U(0.9, 0.999) at zero gate input
+    lam0 = jnp.linspace(0.12, 0.9, L)
+    return {
+        "w_gate": _dense(ks[0], D, (D, L), cfg.dtype),
+        "w_rec": _dense(ks[1], D, (D, L), cfg.dtype),
+        "conv_w": _dense(ks[2], CONV_W, (CONV_W, L), cfg.dtype),
+        "conv_b": jnp.zeros((L,), jnp.float32),
+        "w_a": _dense(ks[3], L, (L, L), cfg.dtype),
+        "w_i": _dense(ks[4], L, (L, L), cfg.dtype),
+        "log_lam": jnp.log(jnp.expm1(lam0)),             # softplus^-1
+        "w_out": _dense(ks[5], L, (L, D), cfg.dtype),
+    }
+
+
+def rglru_spec(cfg: ModelConfig) -> Params:
+    return {
+        "w_gate": P("fsdp", "model"),
+        "w_rec": P("fsdp", "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "w_a": P(None, "model"),
+        "w_i": P(None, "model"),
+        "log_lam": P("model"),
+        "w_out": P("model", "fsdp"),
+    }
+
+
+def _branches(p: Params, x: jax.Array):
+    gate = jnp.einsum("btd,dl->btl", x, p["w_gate"])
+    rec = jnp.einsum("btd,dl->btl", x, p["w_rec"])
+    return gate, rec
+
+
+def rglru_forward(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Train / prefill.  x: (B,T,D)."""
+    B, T, D = x.shape
+    gate, rec = _branches(p, x)
+    gate = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    pad = jnp.pad(rec, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, w : w + T] * p["conv_w"][w][None, None] for w in range(CONV_W)
+    ) + p["conv_b"].astype(rec.dtype)
+    a_gate = jnp.einsum("btl,lm->btm", conv, p["w_a"])
+    i_gate = jnp.einsum("btl,lm->btm", conv, p["w_i"])
+    h, _ = ops.rglru(conv, a_gate, i_gate, p["log_lam"])
+    y = h * gate
+    return jnp.einsum("btl,ld->btd", y, p["w_out"])
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, cfg.lru), dtype),
+        "h": jnp.zeros((batch, cfg.lru), jnp.float32),
+    }
+
+
+def rglru_cache_spec(cfg: ModelConfig) -> Params:
+    return {"conv": P("batch", None, "model"), "h": P("batch", "model")}
+
+
+def rglru_decode(p: Params, x: jax.Array, cfg: ModelConfig, cache: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """One token.  x: (B,1,D)."""
+    gate, rec = _branches(p, x)                          # (B,1,L)
+    gate = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    window = jnp.concatenate([cache["conv"], rec], axis=1)   # (B,W,L)
+    conv = jnp.einsum("bwl,wl->bl", window, p["conv_w"]) + p["conv_b"].astype(rec.dtype)
+    a_gate = jnp.einsum("bl,lm->bm", conv, p["w_a"])
+    i_gate = jnp.einsum("bl,lm->bm", conv, p["w_i"])
+    _, h = ops.rglru_step(conv, a_gate, i_gate, p["log_lam"], cache["h"])
+    y = (h.astype(x.dtype) * gate[:, 0])
+    out = jnp.einsum("bl,ld->bd", y, p["w_out"])[:, None]
+    return out, {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,176 @@
+"""Logical-axis sharding: rules, activation constraints, spec resolution.
+
+Param/activation specs in the model code use LOGICAL names:
+
+=========  ==============================================================
+batch      activation batch dim (data parallel; + model axis under "dp")
+model      tensor-parallel dim (heads / ffn / experts / vocab slices)
+model_kv   KV-head dim — model axis iff the dim divides, else replicated
+fsdp       weight storage sharding (ZeRO-3-ish); gathered on use by GSPMD
+vocab      embedding-table vocab dim
+seq        sequence dim (KV-cache seq sharding for decode)
+expert     MoE expert dim
+=========  ==============================================================
+
+:func:`rules_for` maps logical → physical per (policy, multi_pod).
+:func:`resolve_spec` / :func:`resolve_tree` bind them to a mesh with two
+safety rules: an axis is DROPPED for a dim it does not divide, and an
+axis already used earlier in the same spec is dropped (left wins).
+Inside traced code, :func:`shard` applies a with_sharding_constraint only
+when rules + mesh are active, so unit tests run unchanged on one device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Rules = Dict[str, Union[str, Tuple[str, ...], None]]
+
+_state = threading.local()
+
+
+def rules_for(policy: str, multi_pod: bool, fsdp: bool = False) -> Rules:
+    # "pod" goes LAST in every composite: resolution is cumulative left-to-
+    # right, and a batch of 256 must claim (data=16, model=16) before the
+    # pod axis makes the product 512 — pod-first left whisper/starcoder
+    # multi-pod batches 8x under-sharded (EXPERIMENTS §Perf, sweep-3).
+    pod: Tuple[str, ...] = ("pod",) if multi_pod else ()
+    if policy == "tp":
+        return {
+            "batch": ("data",) + pod,
+            "model": "model",
+            "model_kv": "model",
+            "fsdp": (("data",) + pod) if fsdp else None,
+            "vocab": "model",
+            "seq": "model",
+            "expert": "model",
+        }
+    if policy == "fsdp":
+        # ZeRO-3 full-DP: every activation batch-shards over data AND model
+        # (so compute shards fully even when heads % axis != 0); weights
+        # store sharded over every axis and are all-gathered on use.
+        return {
+            "batch": ("data", "model") + pod,
+            "model": None,
+            "model_kv": None,
+            "fsdp": ("data", "model") + pod,
+            "vocab": ("data", "model") + pod,
+            "seq": "model",
+            "expert": None,
+        }
+    if policy == "dp":
+        return {
+            "batch": ("data", "model") + pod,
+            "model": None,
+            "model_kv": None,
+            "fsdp": None,
+            "vocab": None,
+            "seq": None,
+            "expert": None,
+        }
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+@contextlib.contextmanager
+def active_rules(rules: Rules, mesh: jax.sharding.Mesh):
+    """Enable logical-axis resolution inside traced model code."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _resolve_entry(entry, rules: Rules, used: set,
+                   axis_sizes: Dict[str, int], dim: Optional[int]):
+    """One PartitionSpec entry -> physical axes (tuple) or None."""
+    if entry is None:
+        return None
+    logical = entry if isinstance(entry, (tuple, list)) else (entry,)
+    phys: list = []
+    for name in logical:
+        mapped = rules.get(name, None) if name in rules else name
+        if mapped is None:
+            continue
+        for ax in (mapped if isinstance(mapped, tuple) else (mapped,)):
+            if ax in used or ax not in axis_sizes:
+                continue
+            size = axis_sizes[ax]
+            cur = 1
+            for a in phys:
+                cur *= axis_sizes[a]
+            if dim is not None and dim % (cur * size) != 0:
+                continue  # divisibility fallback: drop this axis
+            phys.append(ax)
+            used.add(ax)
+    if not phys:
+        return None
+    return tuple(phys) if len(phys) > 1 else phys[0]
+
+
+def resolve_spec(spec: P, rules: Rules, mesh: jax.sharding.Mesh,
+                 shape: Optional[Tuple[int, ...]] = None) -> P:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for i, entry in enumerate(spec):
+        dim = shape[i] if shape is not None and i < len(shape) else None
+        out.append(_resolve_entry(entry, rules, used, axis_sizes, dim))
+    return P(*out)
+
+
+def resolve_tree(spec_tree, abstract_tree, rules: Rules,
+                 mesh: jax.sharding.Mesh):
+    """Resolve a pytree of logical specs against matching abstract arrays."""
+    def one(spec, arr):
+        return jax.sharding.NamedSharding(
+            mesh, resolve_spec(spec, rules, mesh, tuple(arr.shape))
+        )
+    return jax.tree.map(one, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_tree(tree, spec_tree):
+    """Constrain every leaf of ``tree`` to its logical spec (no-op w/o rules).
+
+    Used by the train step to pin gradient-accumulation buffers to the
+    PARAMETER sharding: left unconstrained, GSPMD replicates them over the
+    fsdp/data axes and every microbatch pays a full-gradient all-reduce
+    instead of a reduce-scatter into the shard (§Perf iter C1).
+    """
+    ctx = current_context()
+    if ctx is None:
+        return tree
+    rules, mesh = ctx
+
+    def one(spec, x):
+        rs = resolve_spec(spec, rules, mesh, tuple(x.shape))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, rs))
+
+    return jax.tree.map(one, spec_tree, tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def current_context():
+    """(rules, mesh) if model code runs under :func:`active_rules`, else None."""
+    return getattr(_state, "ctx", None)
+
+
+def shard(x: jax.Array, *logical) -> jax.Array:
+    """Constrain ``x`` to the resolved logical spec (no-op w/o active rules)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    spec = resolve_spec(P(*logical), rules, mesh, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )

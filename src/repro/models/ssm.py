@@ -1,0 +1,111 @@
+"""Mamba1 block (falcon-mamba-7b): gated selective-state-space mixer.
+
+x -> in_proj -> (u, z); u -> causal depthwise conv -> silu -> selective
+scan (see :func:`repro.kernels.ops.ssm_scan`) -> gate by silu(z) ->
+out_proj.  Decode keeps (conv window, ssm state) as the recurrent cache —
+O(1) in context length, which is why falcon-mamba runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense
+
+Params = Dict[str, Any]
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    D, I, R, N = cfg.d_model, cfg.inner, cfg.dtrank, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias ~ softplus-inverse of ~0.001-0.1
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (I, 1))
+    return {
+        "in_proj": _dense(ks[0], D, (D, 2 * I), cfg.dtype),
+        "conv_w": _dense(ks[1], cfg.ssm_conv, (cfg.ssm_conv, I), cfg.dtype),
+        "conv_b": jnp.zeros((I,), jnp.float32),
+        "x_proj": _dense(ks[2], I, (I, R + 2 * N), cfg.dtype),
+        "dt_proj": _dense(ks[3], R, (R, I), cfg.dtype),
+        "dt_bias": jnp.full((I,), -4.6, jnp.float32),   # softplus^-1(~0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((I,), jnp.float32),
+        "out_proj": _dense(ks[5], I, (I, D), cfg.dtype),
+    }
+
+
+def mamba_spec(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": P("fsdp", "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "x_proj": P("model", None),
+        "dt_proj": P(None, "model"),
+        "dt_bias": P("model"),
+        "A_log": P("model", None),
+        "D": P("model"),
+        "out_proj": P("model", "fsdp"),
+    }
+
+
+def _split_xproj(p: Params, u: jax.Array, cfg: ModelConfig):
+    R, N = cfg.dtrank, cfg.ssm_state
+    proj = jnp.einsum("...i,ir->...r", u, p["x_proj"])
+    dt_r, B, C = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jnp.einsum("...r,ri->...i", dt_r, p["dt_proj"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return dt, B, C
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Train / prefill over a full sequence.  x: (B,T,D)."""
+    B, T, D = x.shape
+    I = cfg.inner
+    uz = jnp.einsum("btd,di->bti", x, p["in_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)                      # (B,T,I) each
+    # causal depthwise conv, window ssm_conv
+    W = cfg.ssm_conv
+    upad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(
+        upad[:, w : w + T] * p["conv_w"][w][None, None] for w in range(W)
+    ) + p["conv_b"].astype(u.dtype)
+    u = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    dt, Bm, Cm = _split_xproj(p, u, cfg)
+    A = -jnp.exp(p["A_log"])                              # (I,N), negative
+    y, _ = ops.ssm_scan(u, dt, A, Bm, Cm, p["D"])
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bti,id->btd", y, p["out_proj"])
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.inner), dtype),
+        "h": jnp.zeros((batch, cfg.inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_cache_spec(cfg: ModelConfig) -> Params:
+    return {"conv": P("batch", None, "model"), "h": P("batch", "model", None)}
+
+
+def mamba_decode(p: Params, x: jax.Array, cfg: ModelConfig, cache: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """One token.  x: (B,1,D); cache: conv window (B,W-1,I) + state (B,I,N)."""
+    B = x.shape[0]
+    uz = jnp.einsum("btd,di->bti", x, p["in_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)                      # (B,1,I)
+    window = jnp.concatenate([cache["conv"], u], axis=1)  # (B,W,I)
+    conv = jnp.einsum("bwi,wi->bi", window, p["conv_w"]) + p["conv_b"].astype(u.dtype)
+    ut = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)  # (B,I)
+    dt, Bm, Cm = _split_xproj(p, ut, cfg)
+    A = -jnp.exp(p["A_log"])
+    yt, h = ops.ssm_step(ut, dt, A, Bm, Cm, p["D"], cache["h"])
+    yt = yt * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(yt.dtype)
+    y = jnp.einsum("bi,id->bd", yt, p["out_proj"])[:, None]
+    new_cache = {"conv": window[:, 1:], "h": h}
+    return y, new_cache

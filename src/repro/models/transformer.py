@@ -1,0 +1,562 @@
+"""Model assembly: decoder LMs and encoder-decoders from block patterns.
+
+Layers are grouped into *super-blocks* (one period of ``cfg.pattern``) and
+scanned (``jax.lax.scan``) with stacked parameters, so HLO size — and
+hence compile time at 512 devices — is independent of depth.  A pattern
+remainder (e.g. recurrentgemma's 38 = 12×3 + 2) is unrolled.
+
+Three entry points:
+* :func:`forward`      — full-sequence logits (training).
+* :func:`prefill`      — full-sequence pass that also builds the KV/state
+  cache and returns last-position logits (serving, phase 1).
+* :func:`decode_step`  — one token against the cache (serving, phase 2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+try:
+    from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+except ImportError:  # newer jax: moved under jax.experimental
+    from jax.experimental.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Per-block init / spec
+# ===========================================================================
+def _block_init(key, btype: str, cfg: ModelConfig, cross: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.norm_init(cfg)}
+    if btype in ("attn", "local"):
+        p["mixer"] = L.attn_init(ks[0], cfg)
+    elif btype == "rglru":
+        p["mixer"] = R.rglru_init(ks[0], cfg)
+    elif btype == "mamba":
+        p["mixer"] = S.mamba_init(ks[0], cfg)
+        return p  # mamba block: norm + mixer only
+    else:
+        raise ValueError(btype)
+    if cross:
+        p["norm_c"] = L.norm_init(cfg)
+        p["cross"] = L.attn_init(ks[2], cfg)
+    p["norm2"] = L.norm_init(cfg)
+    p["ffn"] = M.moe_init(ks[1], cfg) if cfg.is_moe else L.ffn_init(ks[1], cfg)
+    return p
+
+
+def _block_spec(btype: str, cfg: ModelConfig, cross: bool) -> Params:
+    p: Params = {"norm1": L.norm_spec(cfg)}
+    if btype in ("attn", "local"):
+        p["mixer"] = L.attn_spec(cfg)
+    elif btype == "rglru":
+        p["mixer"] = R.rglru_spec(cfg)
+    elif btype == "mamba":
+        p["mixer"] = S.mamba_spec(cfg)
+        return p
+    if cross:
+        p["norm_c"] = L.norm_spec(cfg)
+        p["cross"] = L.attn_spec(cfg)
+    p["norm2"] = L.norm_spec(cfg)
+    p["ffn"] = M.moe_spec(cfg) if cfg.is_moe else L.ffn_spec(cfg)
+    return p
+
+
+def _superblock_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"b{i}": _block_init(ks[i], bt, cfg, cross)
+        for i, bt in enumerate(cfg.pattern)
+    }
+
+
+def _superblock_spec(cfg: ModelConfig, cross: bool = False,
+                     stacked: bool = True) -> Params:
+    sb = {
+        f"b{i}": _block_spec(bt, cfg, cross)
+        for i, bt in enumerate(cfg.pattern)
+    }
+    if not stacked:
+        return sb
+    return jax.tree.map(lambda s: P(None, *s), sb,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ===========================================================================
+# Whole-model init / spec
+# ===========================================================================
+def init_params(key, cfg: ModelConfig) -> Params:
+    ke, kb, kr, kenc = jax.random.split(key, 4)
+    cross = cfg.kind == "encdec"
+    p: Params = {"embed": L.embed_init(ke, cfg), "final_norm": L.norm_init(cfg)}
+    if cfg.n_super > 0:
+        keys = jax.random.split(kb, cfg.n_super)
+        p["blocks"] = jax.vmap(
+            lambda k: _superblock_init(k, cfg, cross)
+        )(keys)
+    for i, bt in enumerate(cfg.remainder):
+        p[f"rem{i}"] = _block_init(
+            jax.random.fold_in(kr, i), bt, cfg, cross
+        )
+    if cfg.kind == "encdec":
+        enc_cfg = _enc_cfg(cfg)
+        ekeys = jax.random.split(kenc, cfg.enc_layers)
+        p["enc_blocks"] = jax.vmap(
+            lambda k: _block_init(k, "attn", enc_cfg, cross=False)
+        )(ekeys)
+        p["enc_final_norm"] = L.norm_init(cfg)
+    if cfg.frontend == "vision":
+        p["patch_proj"] = L._dense(
+            jax.random.fold_in(ke, 7), cfg.d_model,
+            (cfg.d_model, cfg.d_model), cfg.dtype,
+        )
+    return p
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    # Whisper encoder: same width, bidirectional MHA (kv == heads).
+    import dataclasses
+    return dataclasses.replace(cfg, n_kv_heads=cfg.n_heads)
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    cross = cfg.kind == "encdec"
+    p: Params = {"embed": L.embed_spec(cfg), "final_norm": L.norm_spec(cfg)}
+    if cfg.n_super > 0:
+        p["blocks"] = _superblock_spec(cfg, cross, stacked=True)
+    for i, bt in enumerate(cfg.remainder):
+        p[f"rem{i}"] = _block_spec(bt, cfg, cross)
+    if cfg.kind == "encdec":
+        enc_cfg = _enc_cfg(cfg)
+        enc = _block_spec("attn", enc_cfg, cross=False)
+        p["enc_blocks"] = jax.tree.map(
+            lambda s: P(None, *s), enc, is_leaf=lambda x: isinstance(x, P)
+        )
+        p["enc_final_norm"] = L.norm_spec(cfg)
+    if cfg.frontend == "vision":
+        p["patch_proj"] = P("fsdp", "model")
+    return p
+
+
+# ===========================================================================
+# Block application
+# ===========================================================================
+def _apply_block(btype: str, p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 positions: Optional[jax.Array], enc_out: Optional[jax.Array],
+                 causal: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence pass.  Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if btype in ("attn", "local"):
+        window = cfg.local_window if btype == "local" else 0
+        mix = L.attn_forward(p["mixer"], h, cfg, causal=causal,
+                             window=window, positions=positions)
+        mix = _checkpoint_name(mix, "attn_out")
+    elif btype == "rglru":
+        mix = R.rglru_forward(p["mixer"], h, cfg)
+    elif btype == "mamba":
+        mix = S.mamba_forward(p["mixer"], h, cfg)
+        return x + mix, aux
+    x = x + mix
+    if enc_out is not None:
+        hc = L.apply_norm(p["norm_c"], x, cfg)
+        x = x + L.attn_forward(p["cross"], hc, cfg, causal=False,
+                               kv_from=enc_out)
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    if cfg.is_moe:
+        y, aux = M.moe_forward(p["ffn"], h2, cfg)
+    else:
+        y = L.ffn_forward(p["ffn"], h2, cfg)
+    return x + y, aux
+
+
+def _boundary(x, cfg: ModelConfig) -> jax.Array:
+    """Residual-stream constraint at block boundaries.
+
+    The optimization barrier pins the stream to its storage dtype (bf16):
+    without it XLA hoists the next norm's f32 upcast ACROSS the block's
+    tensor-parallel psum, doubling every residual all-reduce's wire bytes
+    (observed f32[2,4096,16384] all-reduces at 405B; §Perf iter C3b).
+    """
+    if cfg.seq_parallel and x.shape[1] > 1:
+        x = shard(x, "batch", "seq", None)
+    else:
+        x = shard(x, "batch", None, None)
+    return jax.lax.optimization_barrier(x)
+
+
+def _remat_policy(cfg: ModelConfig):
+    """Selective activation checkpointing (§Perf iter 3).
+
+    ``save_attn`` keeps each block's mixer output resident (B,T,D bf16 —
+    tiny next to the O(T x S) flash intermediates) so the backward pass
+    never re-runs attention; everything else is recomputed as usual.
+    """
+    if cfg.remat_policy == "save_attn":
+        return jax.checkpoint_policies.save_only_these_names("attn_out")
+    return None
+
+
+def _apply_superblock(sb: Params, x: jax.Array, cfg: ModelConfig,
+                      positions, enc_out) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    for i, bt in enumerate(cfg.pattern):
+        x, a = _apply_block(bt, sb[f"b{i}"], x, cfg,
+                            positions=positions, enc_out=enc_out)
+        aux = aux + a
+    x = _boundary(x, cfg)
+    return x, aux
+
+
+# ===========================================================================
+# Encoder (whisper)
+# ===========================================================================
+def _encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    enc_cfg = _enc_cfg(cfg)
+    x = shard(frames, "batch", None, None)
+
+    def body(x, bp):
+        x, _ = _apply_block("attn", bp, x, enc_cfg, positions=None,
+                            enc_out=None, causal=False)
+        return shard(x, "batch", None, None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_final_norm"], x, cfg)
+
+
+# ===========================================================================
+# forward (training) — full-sequence logits
+# ===========================================================================
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
+            frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B,T) int32.  Returns (logits (B,T',V), moe_aux).
+
+    ``frames``:  (B, enc_len, D) stub audio-frontend embeddings (whisper).
+    ``patches``: (B, n_patches, D) stub vision embeddings (paligemma);
+    they are projected and prepended, so T' = n_patches + T.
+    """
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.frontend == "vision" and patches is not None:
+        pe = jnp.einsum("bpd,de->bpe", patches.astype(cfg.dtype),
+                        params["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    x = _boundary(x, cfg)
+    enc_out = _encode(params, frames, cfg) if (
+        cfg.kind == "encdec" and frames is not None) else None
+    positions = jnp.arange(x.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.n_super > 0:
+        def body(carry, sb):
+            x, aux = carry
+            x, a = _apply_superblock(sb, x, cfg, positions, enc_out)
+            return (x, aux + a), None
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+    for i, bt in enumerate(cfg.remainder):
+        x, a = _apply_block(bt, params[f"rem{i}"], x, cfg,
+                            positions=positions, enc_out=enc_out)
+        aux = aux + a
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return shard(logits, "batch", None, "vocab"), aux
+
+
+# ===========================================================================
+# KV / state cache
+# ===========================================================================
+def _block_cache_init(btype: str, cfg: ModelConfig, batch: int,
+                      max_len: int, cross: bool) -> Params:
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    c: Params = {}
+    if btype in ("attn", "local"):
+        S_ = min(max_len, cfg.local_window) if btype == "local" else max_len
+        c["k"] = jnp.zeros((batch, S_, K, hd), cfg.dtype)
+        c["v"] = jnp.zeros((batch, S_, K, hd), cfg.dtype)
+    elif btype == "rglru":
+        c.update(R.rglru_cache_init(cfg, batch, cfg.dtype))
+    elif btype == "mamba":
+        c.update(S.mamba_cache_init(cfg, batch, cfg.dtype))
+    if cross:
+        c["ck"] = jnp.zeros((batch, cfg.enc_len, cfg.n_heads, hd), cfg.dtype)
+        c["cv"] = jnp.zeros((batch, cfg.enc_len, cfg.n_heads, hd), cfg.dtype)
+    return c
+
+
+def _block_cache_spec(btype: str, cfg: ModelConfig, cross: bool) -> Params:
+    c: Params = {}
+    if btype in ("attn", "local"):
+        c["k"] = P("batch", "seq", "model_kv", None)
+        c["v"] = P("batch", "seq", "model_kv", None)
+    elif btype == "rglru":
+        c.update(R.rglru_cache_spec(cfg))
+    elif btype == "mamba":
+        c.update(S.mamba_cache_spec(cfg))
+    if cross:
+        c["ck"] = P("batch", "seq", "model", None)
+        c["cv"] = P("batch", "seq", "model", None)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    cross = cfg.kind == "encdec"
+    cache: Params = {}
+    if cfg.n_super > 0:
+        one = lambda: {
+            f"b{i}": _block_cache_init(bt, cfg, batch, max_len, cross)
+            for i, bt in enumerate(cfg.pattern)
+        }
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_super,) + x.shape),
+            one(),
+        )
+    for i, bt in enumerate(cfg.remainder):
+        cache[f"rem{i}"] = _block_cache_init(bt, cfg, batch, max_len, cross)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig) -> Params:
+    cross = cfg.kind == "encdec"
+    cache: Params = {}
+    if cfg.n_super > 0:
+        one = {
+            f"b{i}": _block_cache_spec(bt, cfg, cross)
+            for i, bt in enumerate(cfg.pattern)
+        }
+        cache["blocks"] = jax.tree.map(
+            lambda s: P(None, *s), one, is_leaf=lambda x: isinstance(x, P)
+        )
+    for i, bt in enumerate(cfg.remainder):
+        cache[f"rem{i}"] = _block_cache_spec(bt, cfg, cross)
+    return cache
+
+
+# ===========================================================================
+# decode_step — one token against the cache
+# ===========================================================================
+def _decode_block(btype: str, p: Params, x: jax.Array, cfg: ModelConfig,
+                  cache: Params, index: jax.Array) -> Tuple[jax.Array, Params]:
+    new_cache = dict(cache)
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if btype in ("attn", "local"):
+        ring = btype == "local"
+        window = cfg.local_window if btype == "local" else 0
+        mix, ck, cv = L.attn_decode(p["mixer"], h, cfg, cache["k"],
+                                    cache["v"], index, window=window,
+                                    ring=ring)
+        new_cache["k"], new_cache["v"] = ck, cv
+    elif btype == "rglru":
+        mix, rc = R.rglru_decode(p["mixer"], h, cfg,
+                                 {"conv": cache["conv"], "h": cache["h"]})
+        new_cache.update(rc)
+    elif btype == "mamba":
+        mix, mc = S.mamba_decode(p["mixer"], h, cfg,
+                                 {"conv": cache["conv"], "h": cache["h"]})
+        new_cache.update(mc)
+        return x + mix, new_cache
+    x = x + mix
+    if "ck" in cache:  # cross-attention against the (static) encoder cache
+        hc = L.apply_norm(p["norm_c"], x, cfg)
+        o = L.attn_out(
+            p["cross"],
+            _cross_decode(p["cross"], hc, cfg, cache["ck"], cache["cv"]),
+        )
+        x = x + o
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    if cfg.is_moe:
+        y, _ = M.moe_forward(p["ffn"], h2, cfg)
+    else:
+        y = L.ffn_forward(p["ffn"], h2, cfg)
+    return x + y, new_cache
+
+
+def _cross_decode(p: Params, x: jax.Array, cfg: ModelConfig,
+                  ck: jax.Array, cv: jax.Array) -> jax.Array:
+    from repro.kernels import ops
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if cfg.qk_norm:
+        q = L._qk_normalize(q, p["q_norm"])
+    return ops.decode_attention(q, ck, cv, ck.shape[1])
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                index: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Params]:
+    """tokens: (B,1) int32; index: scalar int32 (current position).
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    x = L.embed(params["embed"], tokens, cfg)
+    x = shard(x, "batch", None, None)
+    new_cache: Params = {}
+
+    if cfg.n_super > 0:
+        def body(x, sb_and_cache):
+            sb, c = sb_and_cache
+            nc: Params = {}
+            for i, bt in enumerate(cfg.pattern):
+                x, nci = _decode_block(bt, sb[f"b{i}"], x, cfg,
+                                       c[f"b{i}"], index)
+                nc[f"b{i}"] = nci
+            return shard(x, "batch", None, None), nc
+
+        x, new_blocks = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"])
+        )
+        new_cache["blocks"] = new_blocks
+    for i, bt in enumerate(cfg.remainder):
+        x, nci = _decode_block(bt, params[f"rem{i}"], x, cfg,
+                               cache[f"rem{i}"], index)
+        new_cache[f"rem{i}"] = nci
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return shard(logits, "batch", None, "vocab"), new_cache
+
+
+# ===========================================================================
+# prefill — forward pass that also populates the cache
+# ===========================================================================
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            max_len: int, *, frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Run the prompt, build the cache, return last-position logits.
+
+    For the ``prefill_32k`` dry-run cell this is the lowered computation.
+    """
+    B, T = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.frontend == "vision" and patches is not None:
+        pe = jnp.einsum("bpd,de->bpe", patches.astype(cfg.dtype),
+                        params["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    x = shard(x, "batch", None, None)
+    Tt = x.shape[1]
+    enc_out = _encode(params, frames, cfg) if (
+        cfg.kind == "encdec" and frames is not None) else None
+    positions = jnp.arange(Tt)
+    cross = cfg.kind == "encdec"
+
+    def fill_block(btype, p, x, c):
+        nc = dict(c)
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if btype in ("attn", "local"):
+            window = cfg.local_window if btype == "local" else 0
+            q, k, v = L.attn_qkv(p["mixer"], h, cfg, positions)
+            from repro.kernels import ops
+            o = ops.flash_attention(q, k, v, causal=True, window=window)
+            mix = L.attn_out(p["mixer"], o)
+            S_ = c["k"].shape[1]
+            if btype == "local":
+                # Ring layout: token t lives at slot t % S_.  The last S_
+                # chronological KVs are a rotation by Tt % S_.
+                kk, vv = k[:, -S_:], v[:, -S_:]
+                if Tt >= S_:
+                    kk = jnp.roll(kk, Tt % S_, axis=1)
+                    vv = jnp.roll(vv, Tt % S_, axis=1)
+                nc["k"] = jax.lax.dynamic_update_slice(
+                    c["k"], kk, (0, 0, 0, 0))
+                nc["v"] = jax.lax.dynamic_update_slice(
+                    c["v"], vv, (0, 0, 0, 0))
+            else:
+                nc["k"] = jax.lax.dynamic_update_slice(
+                    c["k"], k[:, :S_], (0, 0, 0, 0))
+                nc["v"] = jax.lax.dynamic_update_slice(
+                    c["v"], v[:, :S_], (0, 0, 0, 0))
+            x = x + mix
+        elif btype == "rglru":
+            gate, rec = R._branches(p["mixer"], h)
+            gate = jax.nn.gelu(gate.astype(jnp.float32)).astype(h.dtype)
+            pad = jnp.pad(rec, ((0, 0), (R.CONV_W - 1, 0), (0, 0)))
+            conv = sum(
+                pad[:, w : w + Tt] * p["mixer"]["conv_w"][w][None, None]
+                for w in range(R.CONV_W)
+            ) + p["mixer"]["conv_b"].astype(rec.dtype)
+            a_g = jnp.einsum("btl,lm->btm", conv, p["mixer"]["w_a"])
+            i_g = jnp.einsum("btl,lm->btm", conv, p["mixer"]["w_i"])
+            from repro.kernels import ops
+            hs, hT = ops.rglru(conv, a_g, i_g, p["mixer"]["log_lam"])
+            mix = jnp.einsum("btl,ld->btd", hs * gate, p["mixer"]["w_out"])
+            recp = jnp.pad(rec, ((0, 0), (max(R.CONV_W - 1 - Tt, 0), 0),
+                                 (0, 0)))
+            nc["conv"] = recp[:, -(R.CONV_W - 1):]
+            nc["h"] = hT
+            x = x + mix
+        elif btype == "mamba":
+            # Rerun the mixer capturing final state.
+            mix, st = _mamba_prefill(p["mixer"], h, cfg)
+            nc.update(st)
+            return x + mix, nc
+        if cross and enc_out is not None:
+            hc = L.apply_norm(p["norm_c"], x, cfg)
+            q2, k2, v2 = L.attn_qkv(p["cross"], hc, cfg, None,
+                                    kv_from=enc_out)
+            from repro.kernels import ops
+            o2 = ops.flash_attention(q2, k2, v2, causal=False)
+            x = x + L.attn_out(p["cross"], o2)
+            nc["ck"], nc["cv"] = k2, v2
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        if cfg.is_moe:
+            y, _ = M.moe_forward(p["ffn"], h2, cfg)
+        else:
+            y = L.ffn_forward(p["ffn"], h2, cfg)
+        return x + y, nc
+
+    cache = init_cache(cfg, B, max_len)
+    new_cache: Params = {}
+    if cfg.n_super > 0:
+        def body(x, sb_c):
+            sb, c = sb_c
+            nc: Params = {}
+            for i, bt in enumerate(cfg.pattern):
+                x, nci = fill_block(bt, sb[f"b{i}"], x, c[f"b{i}"])
+                nc[f"b{i}"] = nci
+            return _boundary(x, cfg), nc
+        x, nb = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = nb
+    for i, bt in enumerate(cfg.remainder):
+        x, nci = fill_block(bt, params[f"rem{i}"], x, cache[f"rem{i}"])
+        new_cache[f"rem{i}"] = nci
+    x = L.apply_norm(params["final_norm"], x[:, -1:], cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return shard(logits, "batch", None, "vocab"), new_cache
+
+
+def _mamba_prefill(p: Params, x: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, Params]:
+    from repro.kernels import ops
+    B, T, D = x.shape
+    uz = jnp.einsum("btd,di->bti", x, p["in_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    W = cfg.ssm_conv
+    upad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(
+        upad[:, w : w + T] * p["conv_w"][w][None, None] for w in range(W)
+    ) + p["conv_b"].astype(u.dtype)
+    uc = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    dt, Bm, Cm = S._split_xproj(p, uc, cfg)
+    A = -jnp.exp(p["A_log"])
+    y, hT = ops.ssm_scan(uc, dt, A, Bm, Cm, p["D"])
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bti,id->btd", y, p["out_proj"])
+    up = jnp.pad(u, ((0, 0), (max(W - 1 - T, 0), 0), (0, 0)))
+    return out, {"conv": up[:, -(W - 1):], "h": hT}

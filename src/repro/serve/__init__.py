@@ -1,0 +1,5 @@
+"""Serving layer: prefill + batched greedy decode over the sharded cache."""
+
+from repro.serve.decode import make_prefill, make_serve_step
+
+__all__ = ["make_prefill", "make_serve_step"]

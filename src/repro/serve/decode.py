@@ -1,0 +1,51 @@
+"""Batched serving: prefill the prompt, then one-token decode steps.
+
+``serve_step`` is the unit the ``decode_32k`` / ``long_500k`` dry-run
+cells lower: one new token for every sequence in the batch against a
+seq-sharded KV cache (attention archs) or an O(1) recurrent state
+(mamba / recurrentgemma — that is why only those run ``long_500k``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill(params, tokens, *extras_args, **extras):
+        logits, cache = T.prefill(params, tokens, cfg, max_len, **extras)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), logits, cache
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, index
+                   ) -> Tuple[jax.Array, jax.Array, Any]:
+        """tokens: (B,1) current token; index: its position. Greedy argmax."""
+        logits, cache = T.decode_step(params, cache, tokens, index, cfg)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), logits, cache
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
+             max_len: Optional[int] = None, **extras) -> jax.Array:
+    """Greedy generation loop (example/demo scale)."""
+    B, Tp = prompt.shape
+    max_len = max_len or (Tp + steps)
+    prefill = make_prefill(cfg, max_len)
+    step = make_serve_step(cfg)
+    tok, _, cache = prefill(params, prompt, **extras)
+    out = [tok]
+    for i in range(steps - 1):
+        tok, _, cache = step(params, cache, tok[:, None], jnp.int32(Tp + i))
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,19 @@
+"""Training substrate: optimizer, train step, gradient compression."""
+
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    opt_state_specs,
+)
+from repro.train.train_step import TrainState, make_train_step, train_state_init
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_specs",
+    "TrainState",
+    "make_train_step",
+    "train_state_init",
+]

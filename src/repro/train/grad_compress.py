@@ -1,0 +1,83 @@
+"""int8 gradient compression with error feedback (cross-pod DCN saver).
+
+At 1000+ nodes the gradient all-reduce crosses the pod boundary on DCN
+links an order of magnitude slower than ICI.  Compressing the cross-pod
+leg 4x (bf16 -> int8 + fp32 row scale) with error feedback keeps
+convergence while shrinking the dominant §Roofline collective term for
+multi-pod training — this is a beyond-paper optimization measured in
+EXPERIMENTS.md §Perf.
+
+Two layers:
+* :func:`compress` / :func:`decompress` / :func:`ef_round` — pure pytree
+  math (unit-testable anywhere).
+* :func:`compressed_psum` — the shard_map building block that all-gathers
+  int8 shards + scales over an axis and sums dequantized, used by the
+  pod-axis gradient sync.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _rows(x: jax.Array) -> jax.Array:
+    """Reshape any tensor to (rows, <=1024) for row-wise scales."""
+    flat = x.reshape(-1)
+    cols = min(1024, flat.shape[0])
+    pad = (-flat.shape[0]) % cols
+    return jnp.pad(flat, (0, pad)).reshape(-1, cols)
+
+
+def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    q, s = ops.quantize(_rows(x))
+    return q, s
+
+
+def decompress(q: jax.Array, s: jax.Array, shape, dtype) -> jax.Array:
+    flat = ops.dequantize(q, s).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_round(g: jax.Array, err: jax.Array
+             ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Error-feedback quantization: returns (q, scales, ghat, new_err)."""
+    target = g.astype(jnp.float32) + err.astype(jnp.float32)
+    q, s = compress(target)
+    ghat = decompress(q, s, g.shape, jnp.float32)
+    return q, s, ghat.astype(g.dtype), (target - ghat).astype(err.dtype)
+
+
+def ef_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Quantize-allgather-dequantize-sum over ``axis_name`` (shard_map)."""
+    q, s = compress(x)
+    qg = jax.lax.all_gather(q, axis_name)          # (P, rows, cols) int8
+    sg = jax.lax.all_gather(s, axis_name)          # (P, rows, 1)
+    total = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    n = x.size
+    return total.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def compressed_psum_ef(x: jax.Array, err: jax.Array, axis_name: str
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback variant: returns (summed, new_err)."""
+    target = x.astype(jnp.float32) + err.astype(jnp.float32)
+    q, s = compress(target)
+    ghat = decompress(q, s, x.shape, jnp.float32)
+    new_err = (target - ghat).astype(err.dtype)
+    qg = jax.lax.all_gather(q, axis_name)
+    sg = jax.lax.all_gather(s, axis_name)
+    total = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    n = x.size
+    return total.reshape(-1)[:n].reshape(x.shape).astype(x.dtype), new_err

@@ -1,0 +1,75 @@
+"""AdamW with a state-dtype policy (bf16 moments for the 405B config).
+
+Pure functions over pytrees; optimizer state shards exactly like the
+parameters (the spec tree is reused leaf-for-leaf), so FSDP sharding of
+weights automatically ZeRO-shards the moments too.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32   # bf16 for llama3-405b (memory budget)
+
+
+def adamw_init(params, opt: AdamWConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, opt.state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs) -> Dict[str, Any]:
+    from jax.sharding import PartitionSpec as P
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(grads, state, params, opt: AdamWConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, opt.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32) * clip
+        mf = opt.b1 * m.astype(jnp.float32) + (1 - opt.b1) * gf
+        vf = opt.b2 * v.astype(jnp.float32) + (1 - opt.b2) * gf * gf
+        mhat = mf / (1 - opt.b1 ** step.astype(jnp.float32))
+        vhat = vf / (1 - opt.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - opt.lr * delta
+        return (newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = treedef.unflatten([t[0] for t in flat])
+    newm = treedef.unflatten([t[1] for t in flat])
+    newv = treedef.unflatten([t[2] for t in flat])
+    metrics = {"grad_norm": gnorm, "clip": clip}
+    return newp, {"m": newm, "v": newv, "step": step}, metrics

@@ -1,0 +1,296 @@
+"""BaseFS primitive semantics (paper Table 5) + consistency layers (Table 6)."""
+
+import pytest
+
+from repro.core.basefs import SEEK_END, SEEK_SET, BaseFS, BFSError, EventKind
+from repro.core.consistency import (
+    CommitFS,
+    MPIIOFS,
+    PosixFS,
+    SessionFS,
+    make_fs,
+)
+
+
+class TestBaseFSPrimitives:
+    def test_write_read_own_buffer(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"hello world")
+        fs.bfs_seek(c, h, 0, SEEK_SET)
+        assert fs.bfs_read(c, h, 11, owner=0) == b"hello world"
+
+    def test_write_not_visible_without_attach(self):
+        fs = BaseFS()
+        w, r = fs.client(0), fs.client(1)
+        hw = fs.bfs_open(w, "/f")
+        fs.bfs_write(w, hw, b"secret")
+        hr = fs.bfs_open(r, "/f")
+        # No attach: reader queries find nothing; PFS read returns zeros.
+        assert fs.bfs_query(r, hr, 0, 6) == []
+        assert fs.bfs_read(r, hr, 6, owner=None) == b"\0" * 6
+
+    def test_attach_then_cross_client_read(self):
+        fs = BaseFS()
+        w, r = fs.client(0), fs.client(1)
+        hw = fs.bfs_open(w, "/f")
+        fs.bfs_write(w, hw, b"abcdef")
+        fs.bfs_attach(w, hw, 0, 6)
+        hr = fs.bfs_open(r, "/f")
+        owners = fs.bfs_query(r, hr, 0, 6)
+        assert len(owners) == 1 and owners[0].value == 0
+        assert fs.bfs_read(r, hr, 6, owner=0) == b"abcdef"
+
+    def test_attach_unwritten_is_error(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"ab")
+        with pytest.raises(BFSError):
+            fs.bfs_attach(c, h, 0, 10)  # covers unwritten bytes
+
+    def test_attach_file_noop_when_clean(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        rpc_before = fs.ledger.count(EventKind.RPC)
+        assert fs.bfs_attach_file(c, h) == 0
+        assert fs.ledger.count(EventKind.RPC) == rpc_before  # no-op: no RPC
+
+    def test_attach_takeover_between_clients(self):
+        fs = BaseFS()
+        a, b = fs.client(0), fs.client(1)
+        ha = fs.bfs_open(a, "/f")
+        hb = fs.bfs_open(b, "/f")
+        fs.bfs_write(a, ha, b"AAAA")
+        fs.bfs_attach(a, ha, 0, 4)
+        fs.bfs_write(b, hb, b"BB")
+        fs.bfs_attach(b, hb, 0, 2)  # takes over [0,2)
+        reader = fs.client(2)
+        hr = fs.bfs_open(reader, "/f")
+        owners = {(iv.start, iv.end): iv.value
+                  for iv in fs.bfs_query(reader, hr, 0, 4)}
+        assert owners == {(0, 2): 1, (2, 4): 0}
+
+    def test_detach_then_flush_serves_from_pfs(self):
+        fs = BaseFS()
+        w = fs.client(0)
+        h = fs.bfs_open(w, "/f")
+        fs.bfs_write(w, h, b"data0123")
+        fs.bfs_attach_file(w, h)
+        fs.bfs_flush_file(w, h)
+        fs.bfs_detach_file(w, h)
+        r = fs.client(1)
+        hr = fs.bfs_open(r, "/f")
+        assert fs.bfs_query(r, hr, 0, 8) == []  # ownership relinquished
+        assert fs.bfs_read(r, hr, 8, owner=None) == b"data0123"
+
+    def test_detach_never_attached_is_error(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"xy")
+        with pytest.raises(BFSError):
+            fs.bfs_detach(c, h, 0, 2)
+
+    def test_close_discards_buffered_data(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"gone")
+        fs.bfs_close(c, h)
+        h2 = fs.bfs_open(c, "/f")
+        assert fs.bfs_read(c, h2, 4, owner=None) == b"\0" * 4
+
+    def test_owner_serves_after_close(self):
+        """Attached ranges stay readable after the owner closes (listener)."""
+        fs = BaseFS()
+        w = fs.client(0)
+        h = fs.bfs_open(w, "/f")
+        fs.bfs_write(w, h, b"persist!")
+        fs.bfs_attach_file(w, h)
+        fs.bfs_close(w, h)
+        r = fs.client(1)
+        hr = fs.bfs_open(r, "/f")
+        assert fs.bfs_read(r, hr, 8, owner=0) == b"persist!"
+
+    def test_seek_tell_stat(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"0123456789")
+        assert fs.bfs_tell(c, h) == 10
+        fs.bfs_seek(c, h, -4, SEEK_END)
+        assert fs.bfs_tell(c, h) == 6
+        assert fs.bfs_stat_size(c, h) == 10
+
+    def test_zero_fill_unwritten_before_eof(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_seek(c, h, 4, SEEK_SET)
+        fs.bfs_write(c, h, b"tail")
+        fs.bfs_seek(c, h, 0, SEEK_SET)
+        assert fs.bfs_read(c, h, 4, owner=None) == b"\0" * 4
+
+    def test_rpc_ledger_counts(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"x" * 100)  # no RPC
+        assert fs.ledger.count(EventKind.RPC) == 0
+        fs.bfs_attach_file(c, h)
+        assert fs.ledger.count(EventKind.RPC, "attach") == 1
+        fs.bfs_query(c, h, 0, 10)
+        assert fs.ledger.count(EventKind.RPC, "query") == 1
+        assert fs.ledger.total_bytes(EventKind.SSD_WRITE) == 100
+
+
+class TestPosixFS:
+    def test_write_immediately_visible(self):
+        """POSIX: every write attaches; every read queries."""
+        pfs = PosixFS()
+        w = pfs.open(0, "/f")
+        r = pfs.open(1, "/f")
+        pfs.write(w, b"posix!")
+        pfs.seek(r, 0)
+        assert pfs.read(r, 6) == b"posix!"
+
+    def test_rpc_per_op(self):
+        pfs = PosixFS()
+        w = pfs.open(0, "/f")
+        for _ in range(5):
+            pfs.write(w, b"abcd")
+        assert pfs.fs.ledger.count(EventKind.RPC, "attach") == 5
+        r = pfs.open(1, "/f")
+        for _ in range(3):
+            pfs.read(r, 4)
+        assert pfs.fs.ledger.count(EventKind.RPC, "query") == 3
+
+
+class TestCommitFS:
+    def test_visible_only_after_commit(self):
+        cfs = CommitFS()
+        w = cfs.open(0, "/f")
+        r = cfs.open(1, "/f")
+        cfs.write(w, b"commit")
+        cfs.seek(r, 0)
+        assert cfs.read(r, 6) == b"\0" * 6  # not yet visible
+        cfs.commit(w)
+        cfs.seek(r, 0)
+        assert cfs.read(r, 6) == b"commit"
+
+    def test_one_attach_many_writes(self):
+        cfs = CommitFS()
+        w = cfs.open(0, "/f")
+        for _ in range(10):
+            cfs.write(w, b"y" * 8)
+        cfs.commit(w)
+        assert cfs.fs.ledger.count(EventKind.RPC, "attach") == 1
+
+    def test_query_per_read(self):
+        cfs = CommitFS()
+        w = cfs.open(0, "/f")
+        cfs.write(w, b"z" * 64)
+        cfs.commit(w)
+        r = cfs.open(1, "/f")
+        for _ in range(8):
+            cfs.read(r, 8)
+        assert cfs.fs.ledger.count(EventKind.RPC, "query") == 8
+
+    def test_read_own_writes_before_commit(self):
+        cfs = CommitFS()
+        w = cfs.open(0, "/f")
+        cfs.write(w, b"mine")
+        cfs.seek(w, 0)
+        assert cfs.read(w, 4) == b"mine"
+
+
+class TestSessionFS:
+    def test_close_to_open_visibility(self):
+        sfs = SessionFS()
+        w = sfs.open(0, "/f")
+        sfs.session_open(w)
+        sfs.write(w, b"session")
+        r = sfs.open(1, "/f")
+        sfs.session_open(r)  # opened BEFORE writer's close
+        sfs.seek(r, 0)
+        assert sfs.read(r, 7) == b"\0" * 7  # snapshot: not visible
+        sfs.session_close(w)
+        sfs.session_open(r)  # re-open AFTER close
+        sfs.seek(r, 0)
+        assert sfs.read(r, 7) == b"session"
+
+    def test_single_query_per_session(self):
+        sfs = SessionFS()
+        w = sfs.open(0, "/f")
+        sfs.write(w, b"q" * 80)
+        sfs.session_close(w)
+        r = sfs.open(1, "/f")
+        sfs.session_open(r)
+        for i in range(10):
+            sfs.seek(r, i * 8)
+            assert sfs.read(r, 8) == b"q" * 8
+        assert sfs.fs.ledger.count(EventKind.RPC, "query") == 1
+
+    def test_session_close_attaches_once(self):
+        sfs = SessionFS()
+        w = sfs.open(0, "/f")
+        for _ in range(20):
+            sfs.write(w, b"w" * 4)
+        sfs.session_close(w)
+        assert sfs.fs.ledger.count(EventKind.RPC, "attach") == 1
+
+
+class TestMPIIOFS:
+    def test_sync_barrier_sync(self):
+        """The sync-barrier-sync construct makes writes visible (§2.3.3)."""
+        mfs = MPIIOFS()
+        w = mfs.file_open(0, "/f")
+        r = mfs.file_open(1, "/f")
+        mfs.write(w, b"mpiio!")
+        mfs.seek(r, 0)
+        assert mfs.read(r, 6) == b"\0" * 6  # before syncs
+        mfs.file_sync(w)   # writer sync
+        # (barrier happens at application level)
+        mfs.file_sync(r)   # reader sync
+        mfs.seek(r, 0)
+        assert mfs.read(r, 6) == b"mpiio!"
+
+    def test_close_open_pair(self):
+        mfs = MPIIOFS()
+        w = mfs.file_open(0, "/f")
+        mfs.write(w, b"closed")
+        mfs.file_close(w)
+        r = mfs.file_open(1, "/f")
+        mfs.seek(r, 0)
+        assert mfs.read(r, 6) == b"closed"
+
+
+class TestMakeFS:
+    def test_factory(self):
+        assert isinstance(make_fs("posix"), PosixFS)
+        assert isinstance(make_fs("commit"), CommitFS)
+        assert isinstance(make_fs("session"), SessionFS)
+        assert isinstance(make_fs("mpiio"), MPIIOFS)
+        with pytest.raises(ValueError):
+            make_fs("eventual")
+
+    def test_shared_basefs(self):
+        fs = BaseFS()
+        a = make_fs("commit", fs)
+        b = make_fs("session", fs)
+        assert a.fs is b.fs
+
+    def test_multi_owner_strided_read(self):
+        """A read spanning ranges attached by different clients."""
+        cfs = CommitFS()
+        for pid in range(4):
+            fh = cfs.open(pid, "/f")
+            cfs.seek(fh, pid * 4)
+            cfs.write(fh, bytes([65 + pid]) * 4)
+            cfs.commit(fh)
+        r = cfs.open(9, "/f")
+        cfs.seek(r, 0)
+        assert cfs.read(r, 16) == b"AAAABBBBCCCCDDDD"

@@ -1,0 +1,181 @@
+"""Property tests of the paper's central theorem (§4, executable form).
+
+SCNF guarantee: a program that is *properly synchronized* under model M,
+when run on the M-layer, produces a sequentially-consistent execution.
+Hypothesis generates random multi-process I/O programs; for each model we
+(1) run it on the layer, (2) race-check the recorded execution against
+the model spec, (3) check the SC read oracle.  race_free ==> no SC
+violations, ALWAYS.  Conversely, removing the synchronization from a
+conflicting program must be flagged as a storage race.
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.checker import TracedRun
+from repro.core.consistency import CommitFS, SessionFS, make_fs
+from repro.core.model import (COMMIT_MODEL, COMMIT_RELAXED_MODEL, MODELS,
+                              POSIX_MODEL, SESSION_MODEL, Execution, MSC,
+                              OpType)
+
+F = "/prop"
+
+ranges = st.tuples(st.integers(0, 48), st.integers(1, 16))  # (start, len)
+writes_per_proc = st.lists(ranges, min_size=1, max_size=4)
+
+#: Each writer owns a disjoint 64-byte domain — inter-writer overlap would
+#: be a *genuine* storage race (unordered write/write), for which SCNF
+#: promises nothing.  Reads may span domains freely.
+DOM = 64
+
+
+@st.composite
+def programs(draw):
+    n_writers = draw(st.integers(1, 3))
+    writers = {
+        w: [(w * DOM + s, ln) for s, ln in draw(writes_per_proc)]
+        for w in range(n_writers)
+    }
+    reads = [(s % (n_writers * DOM), ln)
+             for s, ln in draw(st.lists(ranges, min_size=1, max_size=6))]
+    return writers, reads
+
+
+def _payload(pid, start, ln):
+    return bytes(((pid * 37 + start + i) % 251 + 1) for i in range(ln))
+
+
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_commit_scnf_guarantee(prog):
+    """writers write+commit; barrier; readers read -> SC must hold."""
+    writers, reads = prog
+    run = TracedRun(CommitFS())
+    whs = {}
+    for w, ws in writers.items():
+        fh = run.open(w, F, node=w)
+        whs[w] = fh
+        for start, ln in ws:
+            run.write_at(w, fh, start, _payload(w, start, ln))
+        run.commit(w, fh)
+    pids = list(writers) + [100 + r for r in range(len(reads))]
+    run.barrier(pids)
+    for r, (start, ln) in enumerate(reads):
+        fh = run.open(100 + r, F, node=10 + r)
+        run.read_at(100 + r, fh, start, ln)
+    race_free, races, violations = run.verify_scnf(COMMIT_MODEL)
+    assert race_free, races
+    assert violations == [], violations
+
+
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_session_scnf_guarantee(prog):
+    writers, reads = prog
+    run = TracedRun(SessionFS())
+    for w, ws in writers.items():
+        fh = run.open(w, F, node=w)
+        run.session_open(w, fh)
+        for start, ln in ws:
+            run.write_at(w, fh, start, _payload(w, start, ln))
+        run.session_close(w, fh)
+    pids = list(writers) + [100 + r for r in range(len(reads))]
+    run.barrier(pids)
+    for r, (start, ln) in enumerate(reads):
+        fh = run.open(100 + r, F, node=10 + r)
+        run.session_open(100 + r, fh)
+        run.read_at(100 + r, fh, start, ln)
+    race_free, races, violations = run.verify_scnf(SESSION_MODEL)
+    assert race_free, races
+    assert violations == [], violations
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 40), st.integers(1, 16))
+def test_commit_missing_sync_is_a_race(start, ln):
+    """write -> barrier -> read WITHOUT commit: the checker must object."""
+    run = TracedRun(CommitFS())
+    fh = run.open(0, F, node=0)
+    run.write_at(0, fh, start, _payload(0, start, ln))
+    run.barrier([0, 1])
+    rh = run.open(1, F, node=1)
+    run.read_at(1, rh, start, ln)
+    race_free, races, _ = run.verify_scnf(COMMIT_MODEL)
+    assert not race_free
+    assert all(x.conflicts(y) for x, y in races)
+    # The SAME trace is race-free under POSIX (hb alone suffices there).
+    assert run.exe.storage_races(POSIX_MODEL) == []
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 40), st.integers(1, 16))
+def test_session_needs_po_close(start, ln):
+    """Another process closing on the writer's behalf does NOT satisfy the
+    strict session MSC (po-edge at the front), but DOES satisfy the
+    relaxed commit MSC (hb commit hb)."""
+    run = TracedRun(SessionFS())
+    fh = run.open(0, F, node=0)
+    run.write_at(0, fh, start, _payload(0, start, ln))
+    run.barrier([0, 2])
+    # Process 2 issues the close (hb-after the write, but wrong process).
+    fh2 = run.open(2, F, node=2)
+    run.session_close(2, fh2)
+    run.barrier([2, 1])
+    rh = run.open(1, F, node=1)
+    run.session_open(1, rh)
+    run.read_at(1, rh, start, ln)
+    assert run.exe.storage_races(SESSION_MODEL), "po edge must be enforced"
+
+
+def test_relaxed_commit_allows_proxy_commit():
+    """COMMIT_RELAXED (hb commit hb) accepts a commit by another process."""
+    exe = Execution()
+    w = exe.write(0, F, 0, 8)
+    s0 = exe.sync(0, "", "send")
+    r2 = exe.sync(2, "", "recv")
+    exe.add_so(s0, r2)
+    c = exe.sync(2, F, "commit")
+    s2 = exe.sync(2, "", "send")
+    r1 = exe.sync(1, "", "recv")
+    exe.add_so(s2, r1)
+    rd = exe.read(1, F, 0, 8)
+    assert exe.storage_races(COMMIT_RELAXED_MODEL) == []
+    assert exe.storage_races(COMMIT_MODEL), "strict commit needs po"
+
+
+def test_unordered_conflicting_writes_race_under_every_model():
+    exe = Execution()
+    exe.write(0, F, 0, 8)
+    exe.write(1, F, 4, 12)
+    for spec in MODELS.values():
+        assert exe.storage_races(spec), spec.name
+
+
+def test_msc_shape_validation():
+    import pytest
+    with pytest.raises(ValueError):
+        MSC(sync_kinds=(frozenset({"commit"}),), edges=("po",))  # type: ignore
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 30),
+                          st.integers(1, 8)), min_size=2, max_size=8))
+def test_hb_is_transitive_and_consistent_with_po(ops):
+    exe = Execution()
+    handles = {}
+    for pid, start, ln in ops:
+        handles.setdefault(pid, []).append(
+            exe.write(pid, F, start, start + ln))
+    # chain so edges 0 -> 1 -> 2 through sync markers
+    marks = {pid: exe.sync(pid, "", "m") for pid in handles}
+    pids = sorted(handles)
+    for a, b in zip(pids, pids[1:]):
+        exe.add_so(marks[a], marks[b])
+    allops = exe.ops
+    for a in allops:
+        for b in allops:
+            if exe.po(a, b):
+                assert exe.hb(a, b)
+            for c in allops:
+                if exe.hb(a, b) and exe.hb(b, c):
+                    assert exe.hb(a, c)

@@ -1,0 +1,161 @@
+"""Litmus tests for the four consistency layers (paper Tables 4 & 6).
+
+Each test is a small program whose outcome the model specification fixes;
+these are the storage-world analogues of the memory-model litmus tables
+in paper §2.
+"""
+
+import pytest
+
+from repro.core.basefs import BaseFS
+from repro.core.consistency import (CommitFS, MPIIOFS, PosixFS, SessionFS,
+                                    make_fs)
+
+F = "/f"
+
+
+def test_posix_write_immediately_visible():
+    fs = PosixFS()
+    w = fs.open(1, F, node=0)
+    fs.write(w, b"abcd")
+    r = fs.open(2, F, node=1)
+    assert fs.read(r, 4) == b"abcd"
+
+
+def test_commit_write_invisible_until_commit():
+    fs = CommitFS()
+    w = fs.open(1, F, node=0)
+    fs.write(w, b"abcd")
+    r = fs.open(2, F, node=1)
+    # Not committed: reader sees the (empty) PFS content, zero-filled.
+    assert fs.read(r, 4) == b"\0\0\0\0"
+    fs.commit(w)
+    fs.seek(r, 0)
+    assert fs.read(r, 4) == b"abcd"
+
+
+def test_commit_scopes_whole_file_since_last_commit():
+    fs = CommitFS()
+    w = fs.open(1, F, node=0)
+    fs.write(w, b"aa")
+    fs.commit(w)
+    fs.write(w, b"bb")        # not yet committed
+    r = fs.open(2, F, node=1)
+    assert fs.read(r, 4) == b"aa\0\0"
+    fs.commit(w)
+    fs.seek(r, 0)
+    assert fs.read(r, 4) == b"aabb"
+
+
+def test_session_close_to_open_required():
+    fs = SessionFS()
+    w = fs.open(1, F, node=0)
+    fs.session_open(w)
+    fs.write(w, b"abcd")
+    r = fs.open(2, F, node=1)
+    fs.session_open(r)        # session opened BEFORE writer closed
+    fs.session_close(w)
+    assert fs.read(r, 4) == b"\0\0\0\0"   # stale snapshot: close-to-open!
+    r2 = fs.open(3, F, node=1)
+    fs.session_open(r2)       # opened AFTER the close -> sees the write
+    assert fs.read(r2, 4) == b"abcd"
+
+
+def test_session_concurrent_republish_is_racy():
+    """A write published DURING an open reader session is a storage race:
+    the model leaves the read undefined (§4 — no close->open MSC between
+    them), and the checker must flag it."""
+    from repro.core.checker import TracedRun
+    from repro.core.model import SESSION_MODEL
+
+    run = TracedRun(SessionFS())
+    w = run.open(1, F, node=0)
+    run.write_at(1, w, 0, b"aaaa")
+    run.session_close(1, w)
+    run.barrier([1, 2])
+    r = run.open(2, F, node=1)
+    run.session_open(2, r)
+    run.read_at(2, r, 0, 4)          # properly synchronized: sees aaaa
+    run.write_at(1, w, 0, b"bbbb")   # republish, NOT ordered vs next read
+    run.session_close(1, w)
+    run.read_at(2, r, 0, 4)          # racy: no open after the close
+    race_free, races, _ = run.verify_scnf(SESSION_MODEL)
+    assert not race_free
+    assert run.reads[0].actual == b"aaaa"
+    assert run.reads[1].actual in (b"aaaa", b"bbbb")  # undefined, not junk
+    # Refreshing the session re-synchronizes: a new open sees bbbb.
+    run.session_open(2, r)
+    run.layer.seek(r, 0)
+    assert run.layer.read(r, 4) == b"bbbb"
+
+
+def test_mpiio_sync_barrier_sync():
+    fs = MPIIOFS()
+    w = fs.file_open(1, F, node=0)
+    r = fs.file_open(2, F, node=1)
+    fs.write(w, b"abcd")
+    assert fs.read(r, 4) == b"\0\0\0\0"   # no sync yet
+    fs.file_sync(w)                       # writer sync
+    fs.seek(r, 0)
+    assert fs.read(r, 4) == b"\0\0\0\0"   # reader has not synced
+    fs.file_sync(r)                       # reader sync (after barrier)
+    fs.seek(r, 0)
+    assert fs.read(r, 4) == b"abcd"
+
+
+def test_latest_attach_wins_overlap():
+    fs = PosixFS()
+    a = fs.open(1, F, node=0)
+    b = fs.open(2, F, node=1)
+    fs.write(a, b"aaaa")
+    fs.seek(b, 2)
+    fs.write(b, b"BB")
+    r = fs.open(3, F, node=2)
+    assert fs.read(r, 4) == b"aaBB"
+
+
+def test_reader_prefers_own_uncommitted_writes():
+    fs = CommitFS()
+    w = fs.open(1, F, node=0)
+    fs.write(w, b"xyz")
+    fs.seek(w, 0)
+    assert fs.read(w, 3) == b"xyz"   # Table 5: local writes visible locally
+
+
+def test_flush_then_detach_serves_from_pfs():
+    base = BaseFS()
+    fs = CommitFS(base)
+    w = fs.open(1, F, node=0)
+    fs.write(w, b"abcd")
+    fs.commit(w)
+    base.bfs_flush_file(w.client, w.bfs_handle)
+    base.bfs_detach_file(w.client, w.bfs_handle)
+    r = fs.open(2, F, node=1)
+    assert fs.read(r, 4) == b"abcd"  # nobody owns it; PFS has the bytes
+
+
+def test_detach_without_flush_loses_visibility():
+    fs = CommitFS()
+    w = fs.open(1, F, node=0)
+    fs.write(w, b"abcd")
+    fs.commit(w)
+    fs.fs.bfs_detach_file(w.client, w.bfs_handle)
+    r = fs.open(2, F, node=1)
+    assert fs.read(r, 4) == b"\0\0\0\0"  # Table 5: discarded, not flushed
+
+
+def test_stat_size_sees_attached_eof():
+    fs = CommitFS()
+    w = fs.open(1, F, node=0)
+    fs.write(w, b"x" * 100)
+    fs.commit(w)
+    r = fs.open(2, F, node=1)
+    assert fs.stat_size(r) == 100
+
+
+def test_make_fs_registry():
+    for name, cls in (("posix", PosixFS), ("commit", CommitFS),
+                      ("session", SessionFS), ("mpiio", MPIIOFS)):
+        assert isinstance(make_fs(name), cls)
+    with pytest.raises(ValueError):
+        make_fs("release")

@@ -1,0 +1,184 @@
+"""Unit + property tests for the BaseFS interval maps (paper §5.1.2)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.intervals import (
+    BufferIntervalMap,
+    IntervalMap,
+    OwnerIntervalMap,
+)
+
+
+class TestIntervalMap:
+    def test_insert_query(self):
+        m = IntervalMap()
+        m.insert(0, 10, "a")
+        assert [(iv.start, iv.end, iv.value) for iv in m.query(0, 10)] == [
+            (0, 10, "a")
+        ]
+
+    def test_split_on_partial_overlap(self):
+        m = IntervalMap()
+        m.insert(0, 10, "a")
+        m.insert(4, 6, "b")
+        got = [(iv.start, iv.end, iv.value) for iv in m]
+        assert got == [(0, 4, "a"), (4, 6, "b"), (6, 10, "a")]
+
+    def test_delete_when_fully_contained(self):
+        m = IntervalMap()
+        m.insert(4, 6, "a")
+        m.insert(0, 10, "b")
+        assert [(iv.start, iv.end, iv.value) for iv in m] == [(0, 10, "b")]
+
+    def test_merge_contiguous_same_value(self):
+        m = IntervalMap()
+        m.insert(0, 5, "a")
+        m.insert(5, 10, "a")
+        assert len(m) == 1
+        assert [(iv.start, iv.end) for iv in m] == [(0, 10)]
+
+    def test_no_merge_different_values(self):
+        m = IntervalMap()
+        m.insert(0, 5, "a")
+        m.insert(5, 10, "b")
+        assert len(m) == 2
+
+    def test_query_clips(self):
+        m = IntervalMap()
+        m.insert(0, 100, "a")
+        got = m.query(30, 40)
+        assert [(iv.start, iv.end) for iv in got] == [(30, 40)]
+
+    def test_gaps_and_covers(self):
+        m = IntervalMap()
+        m.insert(0, 5, "a")
+        m.insert(8, 12, "b")
+        assert m.gaps(0, 12) == [(5, 8)]
+        assert not m.covers(0, 12)
+        assert m.covers(0, 5)
+        assert m.covers(9, 11)
+
+    def test_remove_splits(self):
+        m = IntervalMap()
+        m.insert(0, 10, "a")
+        removed = m.remove(3, 7)
+        assert [(iv.start, iv.end) for iv in removed] == [(3, 7)]
+        assert [(iv.start, iv.end) for iv in m] == [(0, 3), (7, 10)]
+
+    def test_empty_insert_raises(self):
+        m = IntervalMap()
+        with pytest.raises(ValueError):
+            m.insert(5, 5, "a")
+
+
+# Reference model: dict byte -> value.
+@st.composite
+def _ops(draw):
+    n = draw(st.integers(1, 40))
+    ops = []
+    for _ in range(n):
+        kind = draw(st.sampled_from(["insert", "remove"]))
+        a = draw(st.integers(0, 200))
+        b = draw(st.integers(a + 1, 201))
+        v = draw(st.integers(0, 3))
+        ops.append((kind, a, b, v))
+    return ops
+
+
+class TestIntervalMapProperty:
+    @settings(max_examples=200, deadline=None)
+    @given(_ops())
+    def test_matches_bytemap_reference(self, ops):
+        m = IntervalMap()
+        ref = {}
+        for kind, a, b, v in ops:
+            if kind == "insert":
+                m.insert(a, b, v)
+                for p in range(a, b):
+                    ref[p] = v
+            else:
+                m.remove(a, b)
+                for p in range(a, b):
+                    ref.pop(p, None)
+            m.check_invariants()
+        # Compare byte-by-byte over the touched domain.
+        for p in range(0, 202):
+            got = m.query(p, p + 1)
+            if p in ref:
+                assert len(got) == 1 and got[0].value == ref[p], p
+            else:
+                assert got == [], p
+
+    @settings(max_examples=100, deadline=None)
+    @given(_ops())
+    def test_query_always_disjoint_sorted(self, ops):
+        m = IntervalMap()
+        for kind, a, b, v in ops:
+            if kind == "insert":
+                m.insert(a, b, v)
+            else:
+                m.remove(a, b)
+        ivs = m.query(0, 1000)
+        for x, y in zip(ivs, ivs[1:]):
+            assert x.end <= y.start
+
+
+class TestOwnerIntervalMap:
+    def test_attach_takes_over(self):
+        """Paper: ownership is exclusive; re-attach overwrites."""
+        t = OwnerIntervalMap()
+        t.attach(0, 10, 1)
+        t.attach(5, 15, 2)
+        got = [(iv.start, iv.end, iv.value) for iv in t]
+        assert got == [(0, 5, 1), (5, 15, 2)]
+
+    def test_detach_stale_is_noop(self):
+        """Paper: detach of an overwritten range is a no-op."""
+        t = OwnerIntervalMap()
+        t.attach(0, 10, 1)
+        t.attach(0, 10, 2)  # client 2 took over
+        assert t.detach(0, 10, 1) is False
+        assert [(iv.start, iv.end, iv.value) for iv in t] == [(0, 10, 2)]
+
+    def test_detach_partial_ownership(self):
+        t = OwnerIntervalMap()
+        t.attach(0, 10, 1)
+        t.attach(4, 6, 2)
+        assert t.detach(0, 10, 1) is True  # removes only client 1's parts
+        assert [(iv.start, iv.end, iv.value) for iv in t] == [(4, 6, 2)]
+
+
+class TestBufferIntervalMap:
+    def test_record_and_runs(self):
+        m = BufferIntervalMap()
+        m.record_write(0, 10, 100)
+        m.record_write(20, 30, 110)
+        assert m.buffer_runs(0, 30) == [(0, 10, 100), (20, 30, 110)]
+
+    def test_contiguous_writes_merge(self):
+        m = BufferIntervalMap()
+        m.record_write(0, 10, 0)
+        m.record_write(10, 20, 10)  # contiguous in file AND buffer
+        assert len(m) == 1
+
+    def test_noncontiguous_buffer_no_merge(self):
+        m = BufferIntervalMap()
+        m.record_write(0, 10, 0)
+        m.record_write(10, 20, 50)  # gap in buffer
+        assert len(m) == 2
+
+    def test_overwrite_points_to_new_buffer(self):
+        m = BufferIntervalMap()
+        m.record_write(0, 10, 0)
+        m.record_write(2, 5, 40)
+        runs = m.buffer_runs(0, 10)
+        assert runs == [(0, 2, 0), (2, 5, 40), (5, 10, 5)]
+
+    def test_mark_attached(self):
+        m = BufferIntervalMap()
+        m.record_write(0, 10, 0)
+        m.mark_attached(0, 4)
+        assert m.unattached_runs() == [(4, 10, 4)]
+        assert m.attached_runs() == [(0, 4, 0)]

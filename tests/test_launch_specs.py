@@ -1,0 +1,80 @@
+"""Dry-run plumbing testable on one device: input_specs shapes per mode,
+abstract state/cache construction, roofline artifact loading.
+"""
+
+import dataclasses
+import glob
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import tiny_config
+from repro.launch import mesh as M
+from repro.launch.dryrun import input_specs
+from repro.models.config import ShapeCell
+
+CFG = dataclasses.replace(tiny_config("qwen3-32b"), dtype=jnp.float32)
+
+
+def test_input_specs_train():
+    cell = ShapeCell("t", 32, 8, "train")
+    (state, batch), kw = input_specs(CFG, cell)
+    assert kw == {}
+    assert batch["tokens"].shape == (8, 32)
+    assert batch["labels"].dtype == jnp.int32
+    assert set(state) == {"params", "opt", "step"}
+    # no allocation happened: everything is abstract
+    for leaf in jax.tree.leaves(state) + jax.tree.leaves(batch):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_input_specs_prefill_includes_modality():
+    wcfg = dataclasses.replace(tiny_config("whisper-small"),
+                               dtype=jnp.float32)
+    cell = ShapeCell("p", 32, 4, "prefill")
+    (params, batch), kw = input_specs(wcfg, cell)
+    assert "frames" in batch
+    assert batch["frames"].shape == (4, wcfg.enc_len, wcfg.d_model)
+    for leaf in jax.tree.leaves(params):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_input_specs_decode_cache_shapes():
+    cell = ShapeCell("d", 64, 4, "decode")
+    (params, cache, tok, idx), kw = input_specs(CFG, cell)
+    assert tok.shape == (4, 1)
+    assert idx.shape == ()
+    ks = [leaf for path, leaf in
+          jax.tree_util.tree_flatten_with_path(cache)[0]]
+    assert all(isinstance(leaf, jax.ShapeDtypeStruct) for leaf in ks)
+    # attention KV caches carry the cell's max length
+    shapes = {leaf.shape for leaf in ks}
+    assert any(s[-3] == 64 or (len(s) > 3 and s[-3] == 64) for s in shapes)
+
+
+def test_abstract_state_matches_init_shapes():
+    from repro.train.train_step import train_state_init
+    ab = M.abstract_state(CFG)
+    real = train_state_init(jax.random.PRNGKey(0), CFG, M.opt_for(CFG))
+    for a, r in zip(jax.tree.leaves(ab), jax.tree.leaves(real)):
+        assert a.shape == r.shape and a.dtype == r.dtype
+
+
+def test_roofline_rows_load_and_terms():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    import roofline
+    if not glob.glob(os.path.join(roofline.ARTIFACT_DIR, "*.json")):
+        pytest.skip("no dry-run artifacts present")
+    rows = roofline.load_rows()
+    ok = [r for r in rows if r["status"] == "ok"]
+    assert ok, "expected compiled cells"
+    for r in ok:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert r["compute_s"] >= 0 and r["memory_s"] > 0
+        assert 0 <= r["roofline_frac"] <= 1.5
+    table = roofline.format_table(rows)
+    assert "arch" in table.splitlines()[0]

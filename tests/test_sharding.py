@@ -1,0 +1,87 @@
+"""Unit tests for logical-axis resolution and the policy rule tables.
+
+These run on ONE device: resolution logic is pure (mesh axis sizes come
+from a fake mesh built over a reshaped single-device array is impossible,
+so we use the documented 8-device subprocess for mesh-bound checks and
+test the pure parts here with a stub mesh object).
+"""
+
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import resolve_spec, rules_for
+
+
+def _mesh(shape, names):
+    dev = np.empty(shape, dtype=object)
+    return SimpleNamespace(axis_names=names, devices=dev)
+
+
+MESH = _mesh((16, 16), ("data", "model"))
+RULES_TP = rules_for("tp", multi_pod=False)
+RULES_FSDP = rules_for("fsdp", multi_pod=False)
+
+
+def test_divisibility_drop():
+    # 24 heads do not divide the 16-way model axis -> axis dropped.
+    spec = resolve_spec(P("fsdp", "model", None), RULES_TP, MESH,
+                        shape=(3072, 24, 128))
+    assert spec == P(None, None, None)
+    # 32 heads divide -> kept.
+    spec = resolve_spec(P("fsdp", "model", None), RULES_TP, MESH,
+                        shape=(4096, 32, 128))
+    assert spec == P(None, "model", None)
+
+
+def test_axis_used_once_left_wins():
+    spec = resolve_spec(P("batch", "seq", None), RULES_TP, MESH,
+                        shape=(256, 4096, 1024))
+    # batch -> data; seq -> model
+    assert spec == P("data", "model", None)
+    # fsdp-policy batch consumes BOTH axes; seq then resolves to nothing.
+    spec = resolve_spec(P("batch", "seq", None), RULES_FSDP, MESH,
+                        shape=(256, 4096, 1024))
+    assert spec == P(("data", "model"), None, None)
+
+
+def test_fsdp_batch_covers_both_axes_cumulatively():
+    # 32 shards only 16-way (data); model would need 512 divisibility.
+    spec = resolve_spec(P("batch", None, None), RULES_FSDP, MESH,
+                        shape=(32, 4096, 1024))
+    assert spec == P("data", None, None)
+    spec = resolve_spec(P("batch", None, None), RULES_FSDP, MESH,
+                        shape=(256, 4096, 1024))
+    assert spec == P(("data", "model"), None, None)
+
+
+def test_multi_pod_pod_axis_composes_with_data():
+    mesh3 = _mesh((2, 16, 16), ("pod", "data", "model"))
+    rules = rules_for("tp", multi_pod=True)
+    # pod LAST: cumulative divisibility must claim data (and model, for
+    # fsdp/dp policies) before the pod axis doubles the product.
+    spec = resolve_spec(P("batch", None), rules, mesh3, shape=(256, 8))
+    assert spec == P(("data", "pod"), None)
+    rules_f = rules_for("fsdp", multi_pod=True)
+    spec = resolve_spec(P("batch", None, None), rules_f, mesh3,
+                        shape=(256, 4096, 1024))
+    assert spec == P(("data", "model"), None, None)  # pod would need 512
+
+
+def test_unknown_logical_name_passes_through_known_axis():
+    spec = resolve_spec(P("model",), RULES_TP, MESH, shape=(64,))
+    assert spec == P("model")
+
+
+def test_policies_reject_unknown():
+    with pytest.raises(ValueError):
+        rules_for("pp", multi_pod=False)
+
+
+def test_dp_policy_batch_uses_model_axis_too():
+    rules = rules_for("dp", multi_pod=False)
+    spec = resolve_spec(P("batch", None, None), rules, MESH,
+                        shape=(256, 10, 10))
+    assert spec == P(("data", "model"), None, None)

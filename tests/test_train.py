@@ -1,0 +1,83 @@
+"""Training-loop correctness on a tiny model.
+
+* loss strictly decreases over a short memorization run,
+* gradient accumulation (M microbatches) equals the single-batch step,
+* the AdamW update changes every parameter and steps the counter.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import tiny_config
+from repro.data.pipeline import synthetic_batch
+from repro.launch.mesh import opt_for
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import (loss_fn, make_train_step,
+                                    train_state_init)
+
+CFG = dataclasses.replace(tiny_config("starcoder2-3b"), dtype=jnp.float32)
+
+
+def _batch(key, B=4, S=16):
+    return synthetic_batch(key, CFG, B, S)
+
+
+def test_loss_decreases_memorizing_one_batch():
+    opt = AdamWConfig(lr=3e-3)
+    state = train_state_init(jax.random.PRNGKey(0), CFG, opt)
+    step = jax.jit(make_train_step(CFG, opt))
+    batch = _batch(jax.random.PRNGKey(1))
+    losses = []
+    for _ in range(25):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < 0.5 * losses[0], losses[::6]
+    assert all(np.isfinite(losses))
+
+
+def test_grad_accumulation_matches_single_batch():
+    opt = opt_for(CFG)
+    state = train_state_init(jax.random.PRNGKey(0), CFG, opt)
+    batch = _batch(jax.random.PRNGKey(2), B=4)
+    s1, m1 = jax.jit(make_train_step(CFG, opt, num_microbatches=1))(
+        state, batch)
+    s2, m2 = jax.jit(make_train_step(CFG, opt, num_microbatches=2))(
+        state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               atol=1e-5, rtol=1e-5)
+    # f32 reduction-order differences pass through AdamW's rsqrt, so the
+    # post-update tolerance is looser than the loss tolerance.
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_adamw_updates_every_param_and_step():
+    opt = opt_for(CFG)
+    state = train_state_init(jax.random.PRNGKey(0), CFG, opt)
+    state2, metrics = jax.jit(make_train_step(CFG, opt))(
+        state, _batch(jax.random.PRNGKey(3)))
+    assert int(state2["step"]) == int(state["step"]) + 1
+    changed = [
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(state2["params"]))
+    ]
+    assert all(changed), f"{sum(changed)}/{len(changed)} leaves updated"
+    assert "grad_norm" in metrics or "loss" in metrics
+
+
+def test_loss_fn_label_masking():
+    params = train_state_init(jax.random.PRNGKey(0), CFG,
+                              opt_for(CFG))["params"]
+    batch = _batch(jax.random.PRNGKey(4))
+    l_full, _ = loss_fn(params, batch, CFG)
+    masked = dict(batch)
+    masked["labels"] = batch["labels"].at[:, ::2].set(-1)  # mask half
+    l_mask, _ = loss_fn(params, masked, CFG)
+    assert np.isfinite(float(l_mask))
+    assert abs(float(l_mask) - float(l_full)) > 1e-6  # masking has an effect

@@ -1,0 +1,63 @@
+"""Vocab padding (§Perf iter B3): tables padded to %512, semantics intact."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config, tiny_config
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def test_padded_vocab_multiple_and_coverage():
+    for name in ARCHS:
+        cfg = get_config(name)
+        Vp = cfg.vocab_padded
+        assert Vp % 512 == 0 and Vp >= cfg.vocab, (name, Vp)
+        # the padded dim now divides every mesh-axis combination we use
+        for axes in (16, 256, 512):
+            assert Vp % axes == 0, (name, Vp, axes)
+
+
+def test_odd_vocabs_were_the_problem():
+    # The three odd vocabularies that replicated O(B*T*V) logits.
+    for name, v in (("granite-moe-1b-a400m", 49155),
+                    ("whisper-small", 51865),
+                    ("paligemma-3b", 257216)):
+        cfg = get_config(name)
+        assert cfg.vocab == v
+        assert cfg.vocab % 16 != 0 or cfg.vocab % 512 != 0
+        assert cfg.vocab_padded % 512 == 0
+
+
+def test_padded_slots_masked_in_logits():
+    cfg = dataclasses.replace(tiny_config("starcoder2-3b"),
+                              dtype=jnp.float32)  # vocab 128 -> padded 512
+    assert cfg.vocab_padded == 512
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab,
+                              jnp.int32)
+    logits, _ = T.forward(params, toks, cfg)
+    assert logits.shape[-1] == cfg.vocab_padded
+    pad = np.asarray(logits[..., cfg.vocab:])
+    assert np.all(pad < -1e29), "padded slots must be -inf-masked"
+    # argmax can never select a padded id
+    am = np.asarray(jnp.argmax(logits, axis=-1))
+    assert np.all(am < cfg.vocab)
+
+
+def test_embedding_table_shapes_padded():
+    cfg = dataclasses.replace(tiny_config("qwen3-32b"), dtype=jnp.float32)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    assert params["embed"]["table"].shape[0] == cfg.vocab_padded
+    assert params["embed"]["head"].shape[-1] == cfg.vocab_padded
+
+
+def test_params_total_reports_unpadded_spec():
+    # The public parameter count keeps the architecture's nominal vocab.
+    cfg = get_config("granite-moe-1b-a400m")
+    n_spec = cfg.params_total()
+    unpadded = dataclasses.replace(cfg, pad_vocab_to=1)
+    assert n_spec == unpadded.params_total()
