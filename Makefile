@@ -1,0 +1,18 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-fig7
+
+# Tier-1 verification target (same invocation as ROADMAP.md).
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Skip the slow subprocess/multi-device tests.
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PYTHON) -m benchmarks.run --fast
+
+bench-fig7:
+	$(PYTHON) -m benchmarks.run --only fig7 --fast

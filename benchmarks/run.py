@@ -1,14 +1,19 @@
 """Benchmark driver — one module per paper table/figure, plus roofline.
 
 Runs Fig 3 (CN-W/SN-W writes), Fig 4 (CC-R/CS-R reads), Fig 5 (SCR
-checkpoint/restart), Fig 6 (distributed-DL random reads); prints tables,
-writes ``artifacts/bench/*.csv``, evaluates every paper claim, then (if
-dry-run artifacts exist) prints the §Roofline table.
+checkpoint/restart), Fig 6 (distributed-DL random reads), Fig 7 (sharded
+metadata server / RPC batching sweep); prints tables, writes
+``artifacts/bench/*.csv``, evaluates every paper claim, then (if dry-run
+artifacts exist) prints the §Roofline table.
 
 Every benchmark run verifies all bytes it reads — these are correctness
 tests of the consistency layers as much as performance measurements.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig6]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig7]
+                                            [--shards N] [--batch N]
+
+``--shards``/``--batch`` set the deployment topology for figs 3-6 (fig7
+sweeps shard counts itself but honours ``--batch``).
 """
 
 from __future__ import annotations
@@ -17,8 +22,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import fig3_write, fig4_read, fig5_scr, fig6_dl, roofline
+from benchmarks import (fig3_write, fig4_read, fig5_scr, fig6_dl,
+                        fig7_shard, roofline)
 from benchmarks.common import print_table, save_csv
+from repro.io import workloads
 
 FIGS = {
     "fig3": (fig3_write, "Fig 3: write bandwidth (CN-W, SN-W)",
@@ -33,6 +40,10 @@ FIGS = {
     "fig6": (fig6_dl, "Fig 6: DL random-read bandwidth (Preloaded)",
              ("scaling", "hosts", "model", "read_bw", "local_frac",
               "queries", "samples")),
+    "fig7": (fig7_shard, "Fig 7: sharded metadata server + RPC batching "
+             "(RN-R 8KB)",
+             ("workload", "clients", "shards", "batch", "model",
+              "read_bw", "rpc_query", "verified")),
 }
 
 
@@ -41,9 +52,14 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="2 scale points per figure instead of 4")
     ap.add_argument("--only", default="",
-                    help="comma list of figures (fig3,fig4,fig5,fig6)")
+                    help="comma list of figures (fig3,...,fig7)")
     ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="metadata-server shard count for the run")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="RPC batch size in range descriptors (0 = off)")
     args = ap.parse_args(argv)
+    workloads.set_topology(shards=args.shards, batch=args.batch)
 
     wanted = [w for w in args.only.split(",") if w] or list(FIGS)
     all_pass = True

@@ -18,9 +18,10 @@ correctness is testable end-to-end.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+import zlib
+from dataclasses import dataclass, field, replace
 from enum import Enum
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.intervals import BufferIntervalMap, Interval, OwnerIntervalMap
 
@@ -52,27 +53,49 @@ class Event:
     rpc_type: str = ""               # attach/detach/query/stat
     peer: int = -1                   # transfer peer (owner for NET_TRANSFER)
     seq: int = 0                     # global issue order
+    rpc_ranges: int = 1              # range descriptors in an RPC payload
+    shard: int = 0                   # metadata-server shard handling an RPC
 
 
 class EventLedger:
-    """Append-only record of every I/O and RPC event in issue order."""
+    """Append-only record of every I/O and RPC event in issue order.
+
+    Batched RPCs are represented by *editing in place* the still-open RPC
+    event (more ranges, more bytes) rather than appending a new one; the
+    event keeps the seq of the first coalesced call.  ``on_barrier`` hooks
+    let the server's RPC batcher close open batches at phase boundaries.
+    """
 
     def __init__(self) -> None:
         self.events: List[Event] = []
         self._seq = itertools.count()
         self.client_node: Dict[int, int] = {}  # client id -> node id
+        self.on_barrier: List[Callable[[], None]] = []
 
     def record(self, kind: EventKind, client: int, nbytes: int = 0,
-               rpc_type: str = "", peer: int = -1) -> None:
+               rpc_type: str = "", peer: int = -1, rpc_ranges: int = 1,
+               shard: int = 0) -> None:
         self.events.append(
-            Event(kind, client, nbytes, rpc_type, peer, next(self._seq))
+            Event(kind, client, nbytes, rpc_type, peer, next(self._seq),
+                  rpc_ranges, shard)
+        )
+
+    def merge_into(self, idx: int, nbytes: int, nranges: int) -> None:
+        """Grow the RPC event at ``idx`` by a coalesced batch member."""
+        e = self.events[idx]
+        self.events[idx] = replace(
+            e, nbytes=e.nbytes + nbytes, rpc_ranges=e.rpc_ranges + nranges
         )
 
     def mark_phase(self, name: str) -> None:
         """Global barrier + phase boundary for the cost model."""
+        for hook in self.on_barrier:
+            hook()
         self.record(EventKind.MARKER, -1, rpc_type=name)
 
     def clear(self) -> None:
+        for hook in self.on_barrier:
+            hook()
         self.events.clear()
 
     # ---- aggregate views used by tests and the cost model ----
@@ -117,72 +140,223 @@ class UnderlyingPFS:
 
 
 # --------------------------------------------------------------------------
-# Global server (paper §5.1.2): master + round-robin worker queues.
+# Global server (paper §5.1.2), generalized to N hash-partitioned shards
+# with client-side RPC batching.  ``num_shards=1, batch=0`` reproduces the
+# paper's single-threaded global server byte-for-byte.
 # --------------------------------------------------------------------------
+#: Metadata stripe width: byte range [k*stripe, (k+1)*stripe) of a file is
+#: owned by shard (crc32(path) + k) % num_shards.  64KB keeps the paper's
+#: 8KB accesses single-shard while spreading them uniformly over shards.
+DEFAULT_STRIPE = 64 * 1024
+
+
+def shard_of(path: str, offset: int, num_shards: int,
+             stripe: int = DEFAULT_STRIPE) -> int:
+    """Deterministic shard routing (stable across processes, unlike hash())."""
+    if num_shards <= 1:
+        return 0
+    return (zlib.crc32(path.encode()) + offset // stripe) % num_shards
+
+
+def _coalesce(ivs: List[Interval]) -> List[Interval]:
+    """Merge adjacent same-owner intervals gathered from multiple shards."""
+    out: List[Interval] = []
+    for iv in sorted(ivs, key=lambda v: v.start):
+        if out and out[-1].end == iv.start and out[-1].value == iv.value:
+            out[-1] = Interval(out[-1].start, iv.end, iv.value)
+        else:
+            out.append(iv)
+    return out
+
+
 @dataclass
-class ServerTask:
-    rpc_type: str
-    client: int
-    nbytes: int
-    seq: int
+class _OpenBatch:
+    """A still-coalescing RPC: (type, path, shard) plus its ledger slot."""
+
+    key: Tuple[str, str, int]
+    event_idx: int
+    nranges: int
+
+
+class RPCBatcher:
+    """Client-side coalescing of consecutive attach/query RPCs (opt-in).
+
+    A client's metadata calls are sent through a per-client send queue.
+    While the client keeps issuing the SAME rpc type on the SAME file (and
+    shard), the ranges are appended to the still-open RPC — one multi-range
+    message instead of N singletons — until ``max_ranges`` descriptors are
+    packed or a fence closes the batch.  Fences: any non-batchable RPC by
+    the client, a consistency-layer sync point (commit / session_close /
+    file_sync), and every ledger phase barrier.
+
+    Metadata *content* is applied eagerly at call time (correctness is
+    exact); batching changes only how the RPC traffic is priced by the DES,
+    which sees one round-trip carrying ``rpc_ranges`` descriptors.  Note
+    the modeling assumption for queries: coalescing N consecutive lookups
+    models a *vectored* client that presents its next N offsets in one
+    message (true of the benchmark workloads, whose access lists are known
+    upfront) — for serially-dependent reads this is optimistic, which is
+    one reason batching is opt-in and fenced at every sync point.
+    """
+
+    BATCHABLE = ("attach", "query")
+
+    def __init__(self, ledger: EventLedger, max_ranges: int = 0) -> None:
+        self.ledger = ledger
+        self.max_ranges = max_ranges
+        self._open: Dict[int, _OpenBatch] = {}
+        ledger.on_barrier.append(self.fence_all)
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_ranges > 1
+
+    def fence(self, client: int) -> None:
+        """Close the client's open batch (sync point)."""
+        self._open.pop(client, None)
+
+    def fence_all(self) -> None:
+        self._open.clear()
+
+    def submit(self, rpc_type: str, client: int, path: str, shard: int,
+               nranges: int, nbytes: int) -> None:
+        """Record one RPC, coalescing into the client's open batch if legal."""
+        key = (rpc_type, path, shard)
+        ob = self._open.get(client)
+        if (
+            self.enabled
+            and rpc_type in self.BATCHABLE
+            and ob is not None
+            and ob.key == key
+            and ob.nranges + nranges <= self.max_ranges
+        ):
+            self.ledger.merge_into(ob.event_idx, nbytes, nranges)
+            ob.nranges += nranges
+            return
+        idx = len(self.ledger.events)
+        self.ledger.record(EventKind.RPC, client, nbytes, rpc_type=rpc_type,
+                           rpc_ranges=nranges, shard=shard)
+        if self.enabled and rpc_type in self.BATCHABLE:
+            self._open[client] = _OpenBatch(key, idx, nranges)
+        else:
+            self._open.pop(client, None)
+
+
+_EMPTY_TREE = OwnerIntervalMap()
+
+
+class _ServerShard:
+    """One metadata shard: its own master, worker pool (timed by the DES,
+    which round-robins per-shard from the ledger), and owner trees."""
+
+    def __init__(self) -> None:
+        self.trees: Dict[str, OwnerIntervalMap] = {}
+
+    def tree(self, path: str) -> OwnerIntervalMap:
+        return self.trees.setdefault(path, OwnerIntervalMap())
+
+    def peek(self, path: str) -> OwnerIntervalMap:
+        """Read-only lookup: never allocates a tree for an unknown path."""
+        return self.trees.get(path, _EMPTY_TREE)
 
 
 class GlobalServer:
-    """Single global server holding per-file owner interval trees.
+    """Metadata service holding per-file owner interval trees.
 
-    The master thread is modeled as the dispatch loop in :meth:`submit`;
-    worker selection is round-robin as in the paper.  Task *content* runs
-    inline (we are single-process); queue *timing* is replayed by the DES.
+    The paper's server is a single node: one master thread dispatching to a
+    round-robin worker pool.  This implementation hash-partitions the
+    metadata over ``num_shards`` such servers — file stripes of
+    ``stripe`` bytes map to shards via :func:`shard_of` — so query/attach
+    load from many clients spreads over independent masters.  Task
+    *content* runs inline (we are single-process); queue *timing* is
+    replayed per shard by the DES.  With ``num_shards=1`` routing is a
+    no-op and runs match the paper's architecture exactly.
     """
 
-    def __init__(self, ledger: EventLedger, num_workers: int = 23) -> None:
-        # Catalyst nodes have 24 cores: 1 master + 23 workers.
-        self.trees: Dict[str, OwnerIntervalMap] = {}
+    def __init__(self, ledger: EventLedger, num_workers: int = 23,
+                 num_shards: int = 1, stripe: int = DEFAULT_STRIPE,
+                 batch: int = 0) -> None:
+        # Catalyst nodes have 24 cores: 1 master + 23 workers (per shard).
         self.ledger = ledger
         self.num_workers = num_workers
-        self.worker_tasks: List[List[ServerTask]] = [[] for _ in range(num_workers)]
-        self._rr = 0
-        self._task_seq = itertools.count()
+        self.num_shards = max(1, num_shards)
+        self.stripe = stripe
+        self.shards = [_ServerShard() for _ in range(self.num_shards)]
+        self.batcher = RPCBatcher(ledger, batch)
 
-    def _tree(self, path: str) -> OwnerIntervalMap:
-        return self.trees.setdefault(path, OwnerIntervalMap())
+    # ---- routing ------------------------------------------------------
+    def _split_runs(
+        self, path: str, runs: List[Tuple[int, int]]
+    ) -> Dict[int, List[Tuple[int, int]]]:
+        """Partition byte runs into per-shard stripe-aligned pieces."""
+        if self.num_shards == 1:
+            return {0: list(runs)}
+        by_shard: Dict[int, List[Tuple[int, int]]] = {}
+        for start, end in runs:
+            pos = start
+            while pos < end:
+                cut = min(end, (pos // self.stripe + 1) * self.stripe)
+                k = shard_of(path, pos, self.num_shards, self.stripe)
+                by_shard.setdefault(k, []).append((pos, cut))
+                pos = cut
+        return by_shard
 
-    def submit(self, rpc_type: str, client: int, nbytes: int) -> None:
-        """Record the RPC and enqueue the task round-robin (paper's design)."""
-        self.ledger.record(EventKind.RPC, client, nbytes, rpc_type=rpc_type)
-        task = ServerTask(rpc_type, client, nbytes, next(self._task_seq))
-        self.worker_tasks[self._rr].append(task)
-        self._rr = (self._rr + 1) % self.num_workers
+    def submit(self, rpc_type: str, client: int, nbytes: int,
+               shard: int = 0, nranges: int = 1, path: str = "") -> None:
+        """Record the RPC through the batcher; the DES replays the shard's
+        master dispatch + round-robin worker queues from the ledger."""
+        self.batcher.submit(rpc_type, client, path, shard, nranges, nbytes)
 
     # ---- RPC handlers -------------------------------------------------
     def attach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> None:
-        # One RPC packs all supplied ranges (paper: "a single RPC request").
-        payload = 24 * len(runs)  # ~3x8B per range descriptor
-        self.submit("attach", client, payload)
-        tree = self._tree(path)
-        for start, end in runs:
-            tree.attach(start, end, client)
+        # One RPC per involved shard packs that shard's range descriptors
+        # (paper: "a single RPC request"; ~3x8B per descriptor).
+        for k, pieces in self._split_runs(path, runs).items():
+            self.submit("attach", client, 24 * len(pieces), shard=k,
+                        nranges=len(pieces), path=path)
+            tree = self.shards[k].tree(path)
+            for start, end in pieces:
+                tree.attach(start, end, client)
 
     def detach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> bool:
-        self.submit("detach", client, 24 * len(runs))
-        tree = self._tree(path)
         any_removed = False
-        for start, end in runs:
-            any_removed |= tree.detach(start, end, client)
+        for k, pieces in self._split_runs(path, runs).items():
+            self.submit("detach", client, 24 * len(pieces), shard=k,
+                        nranges=len(pieces), path=path)
+            tree = self.shards[k].tree(path)
+            for start, end in pieces:
+                any_removed |= tree.detach(start, end, client)
         return any_removed
 
     def query(self, client: int, path: str, start: int, end: int) -> List[Interval]:
-        self.submit("query", client, 24)
-        return self._tree(path).owners(start, end)
+        found: List[Interval] = []
+        for k, pieces in self._split_runs(path, [(start, end)]).items():
+            self.submit("query", client, 24 * len(pieces), shard=k,
+                        nranges=len(pieces), path=path)
+            tree = self.shards[k].peek(path)
+            for s, e in pieces:
+                found.extend(tree.owners(s, e))
+        # Stitch stripe-split results back into maximal owner runs so the
+        # read path issues the same transfers as the unsharded server.
+        return _coalesce(found)
 
     def query_file(self, client: int, path: str) -> List[Interval]:
-        self.submit("query", client, 24)
-        tree = self._tree(path)
-        return tree.owners(0, tree.max_end) if len(tree) else []
+        # Whole-file queries broadcast: every shard may own stripes.
+        found: List[Interval] = []
+        for k, sh in enumerate(self.shards):
+            self.submit("query", client, 24, shard=k, nranges=1, path=path)
+            tree = sh.peek(path)
+            if len(tree):
+                found.extend(tree.owners(0, tree.max_end))
+        return _coalesce(found)
 
     def stat_eof(self, client: int, path: str, pfs_size: int) -> int:
-        self.submit("stat", client, 16)
-        return max(self._tree(path).max_end, pfs_size)
+        # The file's home shard serves stat (size attr is tracked there in
+        # a real system); content-wise we take the max over all shards.
+        home = shard_of(path, 0, self.num_shards, self.stripe)
+        self.submit("stat", client, 16, shard=home, nranges=1, path=path)
+        eof = max(sh.peek(path).max_end for sh in self.shards)
+        return max(eof, pfs_size)
 
 
 # --------------------------------------------------------------------------
@@ -226,17 +400,51 @@ class BFSClient:
         return bytes(self.buffer[buf_start : buf_start + size])
 
 
+#: Process-wide deployment topology used by ``BaseFS()`` when the caller
+#: does not pass explicit values: metadata-server shard count and RPC
+#: batch size (0 = off).  ``benchmarks.run --shards/--batch`` sets these
+#: so every figure (including SCR and DLIO, which build their own BaseFS)
+#: runs on the same deployment.
+TOPOLOGY = {"shards": 1, "batch": 0}
+
+
+def set_topology(shards: Optional[int] = None,
+                 batch: Optional[int] = None) -> None:
+    """Set process-wide defaults for server shards / RPC batching."""
+    if shards is not None:
+        TOPOLOGY["shards"] = shards
+    if batch is not None:
+        TOPOLOGY["batch"] = batch
+
+
 class BaseFS:
-    """The whole simulated deployment: N logical clients + 1 global server.
+    """The whole simulated deployment: N logical clients + the metadata
+    service (1..N shards, see :class:`GlobalServer`).
 
     Construct once per experiment; create clients with :meth:`client`.
+    ``num_shards`` partitions the server metadata; ``batch`` > 1 enables
+    client-side RPC coalescing with that many range descriptors per
+    message.  ``None`` means "use the process-wide :data:`TOPOLOGY`";
+    the shipped defaults reproduce the paper's configuration.
     """
 
-    def __init__(self, num_workers: int = 23) -> None:
+    def __init__(self, num_workers: int = 23,
+                 num_shards: Optional[int] = None,
+                 stripe: int = DEFAULT_STRIPE,
+                 batch: Optional[int] = None) -> None:
         self.ledger = EventLedger()
-        self.server = GlobalServer(self.ledger, num_workers=num_workers)
+        self.server = GlobalServer(
+            self.ledger, num_workers=num_workers,
+            num_shards=TOPOLOGY["shards"] if num_shards is None else num_shards,
+            stripe=stripe,
+            batch=TOPOLOGY["batch"] if batch is None else batch,
+        )
         self.pfs = UnderlyingPFS(self.ledger)
         self.clients: Dict[int, BFSClient] = {}
+
+    def rpc_fence(self, c: "BFSClient") -> None:
+        """Close the client's open RPC batch (consistency-layer sync point)."""
+        self.server.batcher.fence(c.id)
 
     def client(self, client_id: int, node: Optional[int] = None,
                tier: str = "ssd") -> BFSClient:

@@ -115,7 +115,14 @@ class _LayeredFS:
 
 
 class PosixFS(_LayeredFS):
-    """POSIX consistency: attach on every write, query on every read."""
+    """POSIX consistency: attach on every write, query on every read.
+
+    With RPC batching enabled (``BaseFS(batch=N)``) the per-write attaches
+    of a streaming writer coalesce into multi-range RPCs — the headline
+    win, since PosixFS otherwise pays one server round-trip per write.
+    The layer has no sync point, so only the batcher's own fences (size
+    cap, type/file change, phase barrier) close a batch.
+    """
 
     name = "posix"
 
@@ -142,8 +149,14 @@ class CommitFS(_LayeredFS):
         return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
 
     def commit(self, fh: FileHandle) -> int:
-        """Make all this client's uncommitted writes to the file visible."""
-        return self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        """Make all this client's uncommitted writes to the file visible.
+
+        A commit is a sync point: it flushes (fences) the client's RPC
+        send queue so a batched attach cannot remain open across it.
+        """
+        rc = self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        self.fs.rpc_fence(fh.client)
+        return rc
 
     def read(self, fh: FileHandle, size: int) -> bytes:
         fs, c, h = self.fs, fh.client, fh.bfs_handle
@@ -172,6 +185,7 @@ class SessionFS(_LayeredFS):
 
     def session_close(self, fh: FileHandle) -> int:
         rc = self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        self.fs.rpc_fence(fh.client)  # close-to-open boundary = sync point
         fh.in_session = False
         return rc
 
@@ -216,11 +230,14 @@ class MPIIOFS(_LayeredFS):
 
     def file_sync(self, fh: FileHandle) -> None:
         # Writer side: publish local writes; reader side: refresh snapshot.
+        # MPI_File_sync is a full sync point: fence the RPC send queue.
         self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        self.fs.rpc_fence(fh.client)
         self._refresh(fh)
 
     def file_close(self, fh: FileHandle) -> int:
         self.fs.bfs_attach_file(fh.client, fh.bfs_handle)
+        self.fs.rpc_fence(fh.client)
         return self.close(fh)
 
     def write(self, fh: FileHandle, data: bytes) -> int:

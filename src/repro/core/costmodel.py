@@ -8,8 +8,9 @@ own event chain; contention arises only through shared resources —
 
 * the node-local SSD (clients on one node share one device),
 * the node NIC (client-to-client "RDMA" reads),
-* the single global server (master dispatch serialization + a round-robin
-  worker pool with FIFO queues — exactly the paper's server architecture),
+* the metadata server shards (per-shard master dispatch serialization +
+  a per-shard round-robin worker pool with FIFO queues — the paper's
+  single-server architecture when the ledger carries one shard),
 * the underlying PFS (aggregate bandwidth).
 
 The replay is an event-driven simulation: the client with the smallest
@@ -144,11 +145,13 @@ class CostModel:
         node_ssd: Dict[int, _Resource] = {}
         node_nic: Dict[int, _Resource] = {}
         node_mem: Dict[int, _Resource] = {}
-        server_master = _Resource()
-        workers = [_Resource() for _ in range(hw.server_workers)]
+        # One master + one worker pool PER metadata shard (Event.shard).
+        # A single-shard ledger reproduces the paper's one global server.
+        shard_master: Dict[int, _Resource] = {}
+        shard_workers: Dict[int, List[_Resource]] = {}
+        shard_rr: Dict[int, int] = {}
         pfs = _Resource()
         now = 0.0  # global barrier time
-        rr = 0
 
         def res(table: Dict[int, _Resource], key: int) -> _Resource:
             if key not in table:
@@ -213,15 +216,24 @@ class CostModel:
                 elif k is EventKind.RPC:
                     rpc_count += 1
                     arrive = t + hw.rpc_net_lat
-                    dispatched = server_master.reserve(
+                    dispatched = res(shard_master, e.shard).reserve(
                         arrive, hw.server_occupancy
                     )
-                    nranges = max(1, nb // 24)
+                    if e.shard not in shard_workers:
+                        shard_workers[e.shard] = [
+                            _Resource() for _ in range(hw.server_workers)
+                        ]
+                        shard_rr[e.shard] = 0
+                    workers = shard_workers[e.shard]
+                    rr = shard_rr[e.shard]
+                    # Batched RPCs carry many range descriptors in one
+                    # round-trip; the worker pays per descriptor.
+                    nranges = max(1, e.rpc_ranges)
                     done = workers[rr].reserve(
                         dispatched,
                         hw.task_service + nranges * hw.task_per_range,
                     )
-                    rr = (rr + 1) % len(workers)
+                    shard_rr[e.shard] = (rr + 1) % len(workers)
                     t = done + hw.rpc_net_lat  # response back to client
                 bytes_by_kind[k] = bytes_by_kind.get(k, 0) + nb
                 clock[c] = t

@@ -52,6 +52,7 @@ class IntervalMap:
 
     def __init__(self, merge_values: bool = True):
         self._starts: List[int] = []
+        self._ends: List[int] = []
         self._ivals: List[Interval] = []
         self._merge = merge_values
 
@@ -64,11 +65,10 @@ class IntervalMap:
 
     def _first_overlap_idx(self, start: int, end: int) -> int:
         """Index of the first stored interval with .end > start (candidate)."""
-        # _starts is sorted; find the leftmost interval that could overlap.
-        i = bisect.bisect_right(self._starts, start) - 1
-        if i >= 0 and self._ivals[i].end > start:
-            return i
-        return i + 1
+        # Disjointness makes _ends strictly increasing alongside _starts, so
+        # the sorted-endpoint index answers "first interval ending after
+        # ``start``" in O(log n) — no linear scan even for 1000+-client maps.
+        return bisect.bisect_right(self._ends, start)
 
     # --------------------------------------------------------------- queries
     def query(self, start: int, end: int) -> List[Interval]:
@@ -143,6 +143,7 @@ class IntervalMap:
         new_pieces.sort(key=lambda v: v.start)
         self._ivals[i:j] = new_pieces
         self._starts[i:j] = [iv.start for iv in new_pieces]
+        self._ends[i:j] = [iv.end for iv in new_pieces]
         if self._merge:
             self._merge_around(i, i + len(new_pieces))
 
@@ -173,6 +174,7 @@ class IntervalMap:
             j += 1
         self._ivals[i:j] = new_pieces
         self._starts[i:j] = [iv.start for iv in new_pieces]
+        self._ends[i:j] = [iv.end for iv in new_pieces]
         return removed
 
     def _merge_around(self, lo: int, hi: int) -> None:
@@ -184,8 +186,10 @@ class IntervalMap:
             a, b = self._ivals[k], self._ivals[k + 1]
             if a.end == b.start and a.value == b.value:
                 self._ivals[k] = Interval(a.start, b.end, a.value)
+                self._ends[k] = b.end
                 del self._ivals[k + 1]
                 del self._starts[k + 1]
+                del self._ends[k + 1]
                 hi -= 1
             else:
                 k += 1
@@ -194,6 +198,7 @@ class IntervalMap:
     def check_invariants(self) -> None:
         """Disjoint, sorted, starts-index consistent (used by property tests)."""
         assert self._starts == [iv.start for iv in self._ivals]
+        assert self._ends == [iv.end for iv in self._ivals]
         for a, b in zip(self._ivals, self._ivals[1:]):
             assert a.end <= b.start, f"overlap: {a} vs {b}"
             if self._merge:
@@ -203,7 +208,8 @@ class IntervalMap:
 
     @property
     def max_end(self) -> int:
-        return max((iv.end for iv in self._ivals), default=0)
+        # Sorted endpoints: the last interval necessarily ends furthest.
+        return self._ends[-1] if self._ends else 0
 
 
 class OwnerIntervalMap(IntervalMap):
@@ -255,11 +261,19 @@ class BufferIntervalMap(IntervalMap):
 
     def record_write(self, start: int, end: int, buf_start: int) -> None:
         self.insert(start, end, BufferSlot(buf_start, attached=False))
-        self._merge_contiguous()
+        self._merge_window(start, end)
 
-    def _merge_contiguous(self) -> None:
-        k = 0
-        while k < len(self._ivals) - 1:
+    def _merge_window(self, start: int, end: int) -> None:
+        """Merge only around the just-touched file range (O(log n + k))."""
+        lo = max(self._first_overlap_idx(start, end) - 1, 0)
+        hi = bisect.bisect_left(self._starts, end) + 1
+        self._merge_contiguous(lo, hi)
+
+    def _merge_contiguous(self, lo: int = 0, hi: Optional[int] = None) -> None:
+        if hi is None:
+            hi = len(self._ivals)
+        k = max(lo, 0)
+        while k < min(hi, len(self._ivals)) - 1:
             a, b = self._ivals[k], self._ivals[k + 1]
             va, vb = a.value, b.value
             if (
@@ -268,8 +282,11 @@ class BufferIntervalMap(IntervalMap):
                 and va.buf_start + a.length == vb.buf_start
             ):
                 self._ivals[k] = Interval(a.start, b.end, va)
+                self._ends[k] = b.end
                 del self._ivals[k + 1]
                 del self._starts[k + 1]
+                del self._ends[k + 1]
+                hi -= 1
             else:
                 k += 1
 
@@ -278,7 +295,7 @@ class BufferIntervalMap(IntervalMap):
         runs = self.buffer_runs(start, end)  # snapshot before mutating
         for fs, fe, bs in runs:
             self.insert(fs, fe, BufferSlot(bs, True))
-        self._merge_contiguous()
+        self._merge_window(start, end)
 
     def lookup_interval(self, pos: int) -> Interval:
         i = bisect.bisect_right(self._starts, pos) - 1

@@ -22,7 +22,9 @@ import random as _random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.basefs import BaseFS, EventKind
+# TOPOLOGY/set_topology are re-exported for the benchmark drivers.
+from repro.core.basefs import (BaseFS, EventKind,  # noqa: F401
+                               TOPOLOGY, set_topology)
 from repro.core.consistency import FileHandle, make_fs
 from repro.core.costmodel import CostModel, HardwareConstants, PhaseResult
 
@@ -145,13 +147,18 @@ def _read_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
 
 def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  hw: Optional[HardwareConstants] = None,
-                 verify: bool = True) -> WorkloadResult:
+                 verify: bool = True, shards: Optional[int] = None,
+                 batch: Optional[int] = None) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
-    per call unless the caller passes one in.
+    per call unless the caller passes one in.  ``shards``/``batch``
+    override the process-wide :data:`TOPOLOGY` defaults for that fresh
+    BaseFS (ignored when ``fs`` is supplied); ``None`` already means "use
+    TOPOLOGY" inside ``BaseFS``.
     """
-    fs = fs or BaseFS()
+    if fs is None:
+        fs = BaseFS(num_shards=shards, batch=batch)
     layer = make_fs(cfg.model, fs)
     ledger = fs.ledger
 

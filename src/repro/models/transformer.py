@@ -184,6 +184,24 @@ def _apply_block(btype: str, p: Params, x: jax.Array, cfg: ModelConfig, *,
     return x + y, aux
 
 
+@jax.custom_vjp
+def _opt_barrier(x: jax.Array) -> jax.Array:
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    # Barrier the cotangent too: the backward residual stream needs the
+    # same hoist protection as the forward one.
+    return (jax.lax.optimization_barrier(g),)
+
+
+_opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 def _boundary(x, cfg: ModelConfig) -> jax.Array:
     """Residual-stream constraint at block boundaries.
 
@@ -191,12 +209,15 @@ def _boundary(x, cfg: ModelConfig) -> jax.Array:
     without it XLA hoists the next norm's f32 upcast ACROSS the block's
     tensor-parallel psum, doubling every residual all-reduce's wire bytes
     (observed f32[2,4096,16384] all-reduces at 405B; §Perf iter C3b).
+    ``optimization_barrier`` has no differentiation rule, so the train
+    path routes through a custom-VJP identity that barriers both the
+    primal and the cotangent.
     """
     if cfg.seq_parallel and x.shape[1] > 1:
         x = shard(x, "batch", "seq", None)
     else:
         x = shard(x, "batch", None, None)
-    return jax.lax.optimization_barrier(x)
+    return _opt_barrier(x)
 
 
 def _remat_policy(cfg: ModelConfig):

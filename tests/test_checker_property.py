@@ -9,6 +9,11 @@ violations, ALWAYS.  Conversely, removing the synchronization from a
 conflicting program must be flagged as a storage race.
 """
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,6 +1,10 @@
 """Unit + property tests for the BaseFS interval maps (paper §5.1.2)."""
 
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

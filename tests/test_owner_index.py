@@ -1,0 +1,124 @@
+"""Randomized differential tests: bisect-indexed OwnerIntervalMap vs a
+naive linear reference, plus endpoint-index invariants under churn.
+
+The production map keeps a sorted-endpoint index (``_starts``/``_ends``
+bisect lists) so owner lookups stay O(log n) for 1000+-client maps; the
+reference below stores per-byte ownership and recomputes runs by linear
+scan.  Any divergence on a random attach/detach/query workload is a bug
+in the index maintenance.
+"""
+
+import random
+
+from repro.core.intervals import BufferIntervalMap, OwnerIntervalMap
+
+SPACE = 512  # byte domain for randomized ops
+
+
+class LinearOwnerMap:
+    """Per-byte brute-force model of the server's owner map semantics."""
+
+    def __init__(self):
+        self.byte_owner = {}
+
+    def attach(self, start, end, owner):
+        for pos in range(start, end):
+            self.byte_owner[pos] = owner
+
+    def detach(self, start, end, owner):
+        removed = False
+        for pos in range(start, end):
+            if self.byte_owner.get(pos) == owner:
+                del self.byte_owner[pos]
+                removed = True
+        return removed
+
+    def owners(self, start, end):
+        """Maximal (start, end, owner) runs overlapping [start, end)."""
+        runs = []
+        for pos in range(start, end):
+            o = self.byte_owner.get(pos)
+            if o is None:
+                continue
+            if runs and runs[-1][1] == pos and runs[-1][2] == o:
+                runs[-1] = (runs[-1][0], pos + 1, o)
+            else:
+                runs.append((pos, pos + 1, o))
+        return runs
+
+    @property
+    def max_end(self):
+        return max(self.byte_owner, default=-1) + 1
+
+
+def _runs(ivs):
+    return [(iv.start, iv.end, iv.value) for iv in ivs]
+
+
+def test_owner_map_matches_linear_reference_randomized():
+    rng = random.Random(1234)
+    fast, ref = OwnerIntervalMap(), LinearOwnerMap()
+    for step in range(2000):
+        op = rng.random()
+        start = rng.randrange(0, SPACE - 1)
+        end = rng.randrange(start + 1, min(start + 64, SPACE) + 1)
+        owner = rng.randrange(0, 8)
+        if op < 0.55:
+            fast.attach(start, end, owner)
+            ref.attach(start, end, owner)
+        elif op < 0.75:
+            assert fast.detach(start, end, owner) == ref.detach(
+                start, end, owner
+            ), f"step {step}: detach result diverged"
+        else:
+            assert _runs(fast.owners(start, end)) == ref.owners(start, end), (
+                f"step {step}: owners([{start},{end})) diverged"
+            )
+        fast.check_invariants()
+        assert fast.max_end == ref.max_end, f"step {step}: max_end diverged"
+    # Final full-map comparison.
+    assert _runs(fast.owners(0, SPACE)) == ref.owners(0, SPACE)
+
+
+def test_owner_map_many_owners_full_sweep():
+    """1000-client shape: each client owns a distinct slice; lookups exact."""
+    m = OwnerIntervalMap()
+    n = 1000
+    for c in range(n):
+        m.attach(c * 8, (c + 1) * 8, c)
+    m.check_invariants()
+    assert len(m) == n
+    assert m.max_end == n * 8
+    rng = random.Random(7)
+    for _ in range(200):
+        c = rng.randrange(n)
+        got = _runs(m.owners(c * 8 + 3, c * 8 + 5))
+        assert got == [(c * 8 + 3, c * 8 + 5, c)]
+    # Spanning query crosses owner boundaries correctly.
+    got = _runs(m.owners(12, 28))
+    assert got == [(12, 16, 1), (16, 24, 2), (24, 28, 3)]
+
+
+def test_buffer_map_windowed_merge_matches_semantics():
+    """Windowed _merge_contiguous must leave the same map as a full merge."""
+    rng = random.Random(99)
+    m = BufferIntervalMap()
+    buf = 0
+    for _ in range(500):
+        start = rng.randrange(0, SPACE)
+        ln = rng.randrange(1, 32)
+        m.record_write(start, start + ln, buf)
+        buf += ln
+        if rng.random() < 0.2:
+            s = rng.randrange(0, SPACE)
+            e = rng.randrange(s + 1, SPACE + 16)
+            if m.written(s, e):
+                m.mark_attached(s, e)
+        m.check_invariants()
+        # No missed merges anywhere: a full linear pass finds nothing.
+        for a, b in zip(list(m), list(m)[1:]):
+            assert not (
+                a.end == b.start
+                and a.value.attached == b.value.attached
+                and a.value.buf_start + a.length == b.value.buf_start
+            ), f"unmerged neighbours {a} {b}"

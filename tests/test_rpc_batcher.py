@@ -1,0 +1,186 @@
+"""RPC batcher unit tests: coalescing boundaries + shard routing determinism."""
+
+import pytest
+
+from repro.core.basefs import (
+    DEFAULT_STRIPE,
+    BaseFS,
+    EventKind,
+    shard_of,
+)
+from repro.core.consistency import CommitFS, PosixFS
+
+
+def _rpc_events(fs, rpc_type=None):
+    return [e for e in fs.ledger.events
+            if e.kind is EventKind.RPC
+            and (rpc_type is None or e.rpc_type == rpc_type)]
+
+
+class TestCoalescing:
+    def test_consecutive_attaches_coalesce_up_to_cap(self):
+        fs = BaseFS(batch=4)
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        for _ in range(10):
+            pfs.write(fh, b"x" * 64)
+        attaches = _rpc_events(fs, "attach")
+        # 10 single-range attaches packed 4+4+2.
+        assert [e.rpc_ranges for e in attaches] == [4, 4, 2]
+        # Payload grows with the batch: 24B per range descriptor.
+        assert all(e.nbytes == 24 * e.rpc_ranges for e in attaches)
+
+    def test_batch_disabled_by_default(self):
+        fs = BaseFS()
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        for _ in range(5):
+            pfs.write(fh, b"x" * 64)
+        assert len(_rpc_events(fs, "attach")) == 5
+
+    def test_type_change_closes_batch(self):
+        fs = BaseFS(batch=16)
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"a" * 100)
+        fs.bfs_attach(c, h, 0, 50)
+        fs.bfs_query(c, h, 0, 10)      # different type: not merged
+        fs.bfs_attach(c, h, 50, 50)    # new attach batch
+        assert len(_rpc_events(fs, "attach")) == 2
+        assert len(_rpc_events(fs, "query")) == 1
+
+    def test_file_change_closes_batch(self):
+        fs = BaseFS(batch=16)
+        pfs = PosixFS(fs)
+        fa, fb = pfs.open(0, "/a"), pfs.open(0, "/b")
+        pfs.write(fa, b"x" * 8)
+        pfs.write(fb, b"x" * 8)
+        pfs.write(fa, b"x" * 8)
+        # Alternating files: no two consecutive same-file attaches.
+        assert len(_rpc_events(fs, "attach")) == 3
+
+    def test_clients_batch_independently(self):
+        fs = BaseFS(batch=16)
+        pfs = PosixFS(fs)
+        f0, f1 = pfs.open(0, "/f"), pfs.open(1, "/f")
+        for _ in range(3):  # interleaved writers: per-client streams merge
+            pfs.seek(f0, pfs.tell(f0))
+            pfs.write(f0, b"x" * 8)
+            pfs.write(f1, b"y" * 8)
+        attaches = _rpc_events(fs, "attach")
+        assert len(attaches) == 2
+        assert sorted(e.client for e in attaches) == [0, 1]
+        assert all(e.rpc_ranges == 3 for e in attaches)
+
+    def test_phase_barrier_closes_batch(self):
+        fs = BaseFS(batch=16)
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        pfs.write(fh, b"x" * 8)
+        fs.ledger.mark_phase("next")
+        pfs.write(fh, b"x" * 8)
+        assert len(_rpc_events(fs, "attach")) == 2
+
+    def test_commit_fences_batch(self):
+        fs = BaseFS(batch=16)
+        cfs = CommitFS(fs)
+        fh = cfs.open(0, "/f")
+        cfs.write(fh, b"x" * 64)
+        cfs.commit(fh)
+        cfs.seek(fh, 64)
+        cfs.write(fh, b"y" * 64)
+        cfs.commit(fh)
+        # The fence at the first commit prevents the second commit's
+        # attach from merging into the first RPC.
+        assert len(_rpc_events(fs, "attach")) == 2
+
+    def test_query_coalescing_in_commit_reads(self):
+        fs = BaseFS(batch=8)
+        cfs = CommitFS(fs)
+        w = cfs.open(0, "/f")
+        for _ in range(8):
+            cfs.write(w, b"d" * 16)
+        cfs.commit(w)
+        r = cfs.open(1, "/f")
+        for j in range(8):
+            cfs.seek(r, j * 16)
+            assert cfs.read(r, 16) == b"d" * 16
+        queries = [e for e in _rpc_events(fs, "query") if e.client == 1]
+        # 8 consecutive single-range queries coalesce into one 8-range RPC.
+        assert len(queries) == 1 and queries[0].rpc_ranges == 8
+
+    def test_eager_visibility_while_batch_open(self):
+        # Metadata content applies at call time: a reader immediately sees
+        # ranges whose RPC is still coalescing in the writer's batch.
+        fs = BaseFS(batch=16)
+        pfs = PosixFS(fs)
+        w = pfs.open(0, "/f")
+        pfs.write(w, b"live data!")
+        r = pfs.open(1, "/f")
+        assert pfs.read(r, 10) == b"live data!"
+
+
+class TestShardRouting:
+    def test_shard_of_deterministic_and_stable(self):
+        for n in (1, 2, 4, 8):
+            for off in (0, 1, DEFAULT_STRIPE - 1, DEFAULT_STRIPE,
+                        7 * DEFAULT_STRIPE + 123):
+                a = shard_of("/f", off, n)
+                assert a == shard_of("/f", off, n)  # pure
+                assert 0 <= a < n
+        # Stripe-granular: offsets within one stripe share a shard.
+        assert shard_of("/f", 0, 8) == shard_of("/f", DEFAULT_STRIPE - 1, 8)
+        # Consecutive stripes round-robin over shards.
+        s0 = shard_of("/f", 0, 8)
+        s1 = shard_of("/f", DEFAULT_STRIPE, 8)
+        assert s1 == (s0 + 1) % 8
+
+    def test_single_shard_routing_is_identity(self):
+        assert shard_of("/any", 10**12, 1) == 0
+
+    def test_event_shards_deterministic_across_runs(self):
+        def run():
+            fs = BaseFS(num_shards=4)
+            pfs = PosixFS(fs)
+            w = pfs.open(0, "/f")
+            for j in range(8):
+                pfs.seek(w, j * DEFAULT_STRIPE)
+                pfs.write(w, b"z" * 1024)
+            r = pfs.open(1, "/f")
+            for j in range(8):
+                pfs.seek(r, j * DEFAULT_STRIPE)
+                assert pfs.read(r, 1024) == b"z" * 1024
+            return [(e.rpc_type, e.client, e.shard, e.rpc_ranges)
+                    for e in _rpc_events(fs)]
+
+        first, second = run(), run()
+        assert first == second
+        assert {s for _, _, s, _ in first} == {0, 1, 2, 3}
+
+    @pytest.mark.parametrize("num_shards", [1, 2, 4, 8])
+    def test_sharded_results_match_unsharded(self, num_shards):
+        import random
+
+        rng = random.Random(42)
+        ref = BaseFS()
+        shd = BaseFS(num_shards=num_shards)
+        for fs in (ref, shd):
+            fs.client(0), fs.client(1)
+        hs = {id(fs): fs.bfs_open(fs.clients[0], "/f") for fs in (ref, shd)}
+        data = b"q" * (4 * DEFAULT_STRIPE)
+        for fs in (ref, shd):
+            c = fs.clients[0]
+            fs.bfs_write(c, hs[id(fs)], data)
+            fs.bfs_attach(c, hs[id(fs)], 0, len(data))
+        for _ in range(50):
+            start = rng.randrange(0, len(data) - 1)
+            end = rng.randrange(start + 1, len(data) + 1)
+            got = [
+                (iv.start, iv.end, iv.value)
+                for fs in (ref, shd)
+                for iv in fs.server.query(1, "/f", start, end)
+            ]
+            # Same coalesced owner runs from 1-shard and N-shard servers.
+            assert got[: len(got) // 2] == got[len(got) // 2:]
+        assert (ref.server.stat_eof(1, "/f", 0)
+                == shd.server.stat_eof(1, "/f", 0) == len(data))
