@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-fig7
+.PHONY: test test-fast bench bench-fig7 bench-smoke
 
 # Tier-1 verification target (same invocation as ROADMAP.md).
 test:
@@ -16,3 +16,7 @@ bench:
 
 bench-fig7:
 	$(PYTHON) -m benchmarks.run --only fig7 --fast
+
+# One minimal point per figure through the benchmarks.run machinery.
+bench-smoke:
+	$(PYTHON) -m pytest -x -q tests/test_bench_smoke.py

@@ -33,9 +33,15 @@ def save_csv(name: str, rows: List[Dict]) -> str:
     path = os.path.abspath(os.path.join(ARTIFACT_DIR, f"{name}.csv"))
     if not rows:
         return path
-    keys = list(rows[0].keys())
+    # Union the keys over ALL rows (first-seen order): later rows may
+    # carry columns the first row lacks (e.g. sharded-variant fields).
+    keys: List[str] = []
+    for r in rows:
+        for k in r.keys():
+            if k not in keys:
+                keys.append(k)
     with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=keys)
+        w = csv.DictWriter(f, fieldnames=keys, restval="")
         w.writeheader()
         w.writerows(rows)
     return path
@@ -60,17 +66,47 @@ def print_table(title: str, rows: List[Dict], cols: Sequence[str]) -> None:
 
 @dataclass
 class Claim:
-    """One paper claim checked against measured rows."""
+    """One paper claim checked against measured rows.
+
+    ``requires`` (optional) is a predicate over the rows stating what
+    resolution the claim needs — e.g. "the 16-node point exists" or "at
+    least two node counts".  When it does not hold (typically under
+    ``--fast`` or smoke grids), :meth:`evaluate` returns ``None`` and the
+    driver reports SKIP instead of FAIL: an under-resolved grid is not
+    counter-evidence.
+    """
 
     text: str
     check: Callable[[List[Dict]], bool]
+    requires: Optional[Callable[[List[Dict]], bool]] = None
 
-    def evaluate(self, rows: List[Dict]) -> bool:
+    def evaluate(self, rows: List[Dict]) -> Optional[bool]:
+        """True = PASS, False = FAIL, None = SKIP (under-resolved grid)."""
+        if self.requires is not None:
+            try:
+                resolved = bool(self.requires(rows))
+            except Exception:
+                resolved = False
+            if not resolved:
+                return None
         try:
             return bool(self.check(rows))
         except Exception as e:  # a failed lookup is a failed claim
             print(f"  claim error ({self.text}): {e}")
             return False
+
+
+def scales(rows: List[Dict], key: str, **match) -> List:
+    """Distinct values of ``key`` over rows matching ``match`` (sorted).
+
+    The common building block for ``Claim.requires`` predicates: e.g.
+    ``lambda rows: max(scales(rows, "nodes")) >= 16`` or
+    ``lambda rows: len(scales(rows, "shards")) >= 2``.
+    """
+    return sorted({
+        r[key] for r in rows
+        if key in r and all(r.get(k) == v for k, v in match.items())
+    })
 
 
 def pick(rows: List[Dict], **kv) -> Dict:

@@ -7,38 +7,56 @@ Claims reproduced (paper §6.1.1):
     is a no-op query; session_close == commit),
  3. 8MB writes reach peak SSD bandwidth (1 GB/s x write nodes) under both
     models; 8KB writes cannot saturate the device.
+
+Extension (honest-batching study): a POSIX column, unbatched and with
+RPC send queues (``batch=16``).  Strict POSIX pays one attach round trip
+per write; the batched variant coalesces them into multi-range RPCs
+priced at their flush time — the column quantifies what the relaxation
+buys, alongside the models the paper measures.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks.common import KB, MB, Claim, pick
-from repro.io.workloads import cn_w, sn_w, run_workload
+from benchmarks.common import KB, MB, Claim, pick, scales
+from repro.io.workloads import TOPOLOGY, cn_w, sn_w, run_workload
 
 NODES = (2, 4, 8, 16)
 PEAK_SSD_W = 1.0e9  # B/s per node (paper: Intel 910)
+POSIX_BATCH = 16    # range descriptors per batched posix RPC
+
+
+def _row(name: str, label: str, n: int, model: str, batch, res) -> Dict:
+    bw = res.write_bandwidth
+    return {
+        "workload": name, "access": label, "nodes": n,
+        "model": model, "batch": batch, "write_bw": round(bw),
+        "bw_per_node": round(bw / n),
+        "frac_peak": round(bw / (PEAK_SSD_W * n), 3),
+        "rpc_attach": res.rpc_counts["attach"],
+        "rpc_query": res.rpc_counts["query"],
+        "verified": res.verified_reads,
+    }
 
 
 def run(fast: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     nodes = NODES[:2] if fast else NODES
+    deploy_batch = TOPOLOGY["batch"]
     for s, label, p, m in ((8 * KB, "8KB", 12, 10), (8 * MB, "8MB", 4, 4)):
         for n in nodes:
             for model in ("commit", "session"):
                 for factory, name in ((cn_w, "CN-W"), (sn_w, "SN-W")):
                     cfg = factory(n, s, model, p=p, m=m)
                     res = run_workload(cfg)
-                    bw = res.write_bandwidth
-                    rows.append({
-                        "workload": name, "access": label, "nodes": n,
-                        "model": model, "write_bw": round(bw),
-                        "bw_per_node": round(bw / n),
-                        "frac_peak": round(bw / (PEAK_SSD_W * n), 3),
-                        "rpc_attach": res.rpc_counts["attach"],
-                        "rpc_query": res.rpc_counts["query"],
-                        "verified": res.verified_reads,
-                    })
+                    rows.append(_row(name, label, n, model, deploy_batch,
+                                     res))
+            # POSIX column: per-write attaches, unbatched vs send-queued.
+            for b in (0, POSIX_BATCH):
+                cfg = cn_w(n, s, "posix", p=p, m=m)
+                res = run_workload(cfg, batch=b)
+                rows.append(_row("CN-W", label, n, "posix", b, res))
     return rows
 
 
@@ -68,13 +86,47 @@ CLAIMS = [
             for n in sorted({r["nodes"] for r in rows})),
     ),
     Claim(
-        "8MB writes reach >=90% of peak SSD bandwidth on every scale",
+        "8MB writes reach >=90% of peak SSD bandwidth on every scale "
+        "(commit/session)",
         lambda rows: all(r["frac_peak"] >= 0.90 for r in rows
-                         if r["access"] == "8MB"),
+                         if r["access"] == "8MB"
+                         and r["model"] in ("commit", "session")),
     ),
     Claim(
         "8KB writes stay under 40% of peak (cannot saturate the device)",
         lambda rows: all(r["frac_peak"] <= 0.40 for r in rows
                          if r["access"] == "8KB"),
+    ),
+    Claim(
+        "strict posix trails commit at 8KB (per-write attach round trip); "
+        "send-queue batching recovers most of the gap",
+        lambda rows: all(
+            pick(rows, workload="CN-W", access="8KB", nodes=n,
+                 model="posix", batch=0)["write_bw"]
+            < pick(rows, workload="CN-W", access="8KB", nodes=n,
+                   model="commit")["write_bw"]
+            and pick(rows, workload="CN-W", access="8KB", nodes=n,
+                     model="posix", batch=POSIX_BATCH)["write_bw"]
+            >= 1.2 * pick(rows, workload="CN-W", access="8KB", nodes=n,
+                          model="posix", batch=0)["write_bw"]
+            for n in scales(rows, "nodes")),
+        # The comparison needs the paper's baseline deployment: with a
+        # process-wide --shards/--batch override the commit column is no
+        # longer an unbatched single-server reference.
+        requires=lambda rows: (
+            TOPOLOGY["shards"] == 1 and TOPOLOGY["batch"] == 0 and any(
+                r["model"] == "posix" and r["batch"] == POSIX_BATCH
+                for r in rows)),
+    ),
+    Claim(
+        "posix == commit within 10% at 8MB (attach cost vanishes behind "
+        "large writes), batched or not",
+        lambda rows: all(
+            _close(pick(rows, workload="CN-W", access="8MB", nodes=n,
+                        model="posix", batch=b)["write_bw"],
+                   pick(rows, workload="CN-W", access="8MB", nodes=n,
+                        model="commit")["write_bw"], 0.10)
+            for b in (0, POSIX_BATCH) for n in scales(rows, "nodes")),
+        requires=lambda rows: any(r["model"] == "posix" for r in rows),
     ),
 ]

@@ -15,14 +15,21 @@ Expected outcome (validated by CLAIMS):
     data path, not the server),
  3. therefore the session/commit gap NARROWS as shards are added,
  4. client-side RPC batching slashes PosixFS attach traffic and lifts its
-    write bandwidth.
+    write bandwidth — under HONEST flush-time pricing (batches are priced
+    at their flush position with a per-flush send penalty, never
+    back-dated to the first coalesced call),
+ 5. the batching win needs a nonzero coalescing window: with ``linger=0``
+    the send queue never holds a batch across other client work and the
+    "batched" run degenerates to per-call RPCs,
+ 6. growing the linger beyond the coalescing need only adds queue-hold
+    delay: write bandwidth is non-increasing in the linger sweep.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks.common import KB, Claim, pick
+from benchmarks.common import KB, Claim, pick, scales
 from repro.io.workloads import TOPOLOGY, cn_w, rn_r, run_workload
 
 SHARDS = (1, 2, 4, 8)
@@ -32,6 +39,23 @@ PROCS = 16
 M_OPS = 10
 ACCESS = 8 * KB
 BATCH = 16                  # range descriptors per batched RPC
+LINGER_US = (0.0, 50.0, 200.0, 1000.0)   # send-queue window sweep (us)
+
+
+def _posix_write_row(n: int, batch: int, linger_us) -> Dict:
+    cfg = cn_w(n, ACCESS, "posix", p=PROCS, m=M_OPS)
+    res = run_workload(cfg, shards=1, batch=batch,
+                       linger=None if linger_us is None
+                       else linger_us * 1e-6)
+    return {
+        "workload": "CN-W/posix", "clients": cfg.n * PROCS,
+        "shards": 1, "batch": batch,
+        "linger_us": "" if linger_us is None else linger_us,
+        "model": "posix",
+        "read_bw": round(res.write_bandwidth),  # write phase bw
+        "rpc_query": res.rpc_counts["attach"],  # attach RPC count
+        "verified": 0,
+    }
 
 
 def run(fast: bool = False) -> List[Dict]:
@@ -45,23 +69,22 @@ def run(fast: bool = False) -> List[Dict]:
                 res = run_workload(cfg, shards=k, batch=batch)
                 rows.append({
                     "workload": "RN-R", "clients": cfg.n * PROCS,
-                    "shards": k, "batch": batch, "model": model,
+                    "shards": k, "batch": batch, "linger_us": "",
+                    "model": model,
                     "read_bw": round(res.read_bandwidth),
                     "rpc_query": res.rpc_counts["query"],
                     "verified": res.verified_reads,
                 })
-    # RPC-batching headline: PosixFS streaming writers, batched vs not.
+    # RPC-batching headline: PosixFS streaming writers, batched vs not
+    # (default linger window).
     n = nodes[-1]
     for b in (0, BATCH):
-        cfg = cn_w(n, ACCESS, "posix", p=PROCS, m=M_OPS)
-        res = run_workload(cfg, shards=1, batch=b)
-        rows.append({
-            "workload": "CN-W/posix", "clients": cfg.n * PROCS,
-            "shards": 1, "batch": b, "model": "posix",
-            "read_bw": round(res.write_bandwidth),  # write phase bw
-            "rpc_query": res.rpc_counts["attach"],  # attach RPC count
-            "verified": 0,
-        })
+        rows.append(_posix_write_row(n, b, None))
+    # Linger sweep: honest flush timing makes the coalescing window a
+    # measurable knob — zero disables cross-event coalescing, large
+    # values only add queue-hold delay at barriers.
+    for linger_us in LINGER_US:
+        rows.append(_posix_write_row(n, BATCH, linger_us))
     return rows
 
 
@@ -74,11 +97,16 @@ def _max_clients(rows: List[Dict]) -> int:
     return max(r["clients"] for r in rows if r["workload"] == "RN-R")
 
 
+def _has_shards(rows: List[Dict]) -> bool:
+    return {1, 8} <= set(scales(rows, "shards", workload="RN-R"))
+
+
 CLAIMS = [
     Claim(
         "commit small-random-read bandwidth >= 2x at 8 shards vs 1 shard",
         lambda rows: _bw(rows, "commit", 8, _max_clients(rows))
         >= 2.0 * _bw(rows, "commit", 1, _max_clients(rows)),
+        requires=_has_shards,
     ),
     Claim(
         "session bandwidth shard-insensitive (8 vs 1 shards within 25%)",
@@ -87,6 +115,7 @@ CLAIMS = [
             <= 1.33
             for c in {r["clients"] for r in rows if r["workload"] == "RN-R"}
         ),
+        requires=_has_shards,
     ),
     Claim(
         "session/commit gap narrows with shard count",
@@ -97,9 +126,11 @@ CLAIMS = [
             _bw(rows, "session", 8, _max_clients(rows))
             / _bw(rows, "commit", 8, _max_clients(rows))
         ),
+        requires=_has_shards,
     ),
     Claim(
-        "batched PosixFS writes: fewer attach RPCs and higher write bw",
+        "batched PosixFS writes: fewer attach RPCs and higher write bw "
+        "(honest flush-time pricing)",
         lambda rows: (
             pick(rows, workload="CN-W/posix", batch=BATCH)["rpc_query"]
             < pick(rows, workload="CN-W/posix", batch=0)["rpc_query"] / 4
@@ -107,5 +138,32 @@ CLAIMS = [
             pick(rows, workload="CN-W/posix", batch=BATCH)["read_bw"]
             > 1.5 * pick(rows, workload="CN-W/posix", batch=0)["read_bw"]
         ),
+        requires=lambda rows: any(r["workload"] == "CN-W/posix"
+                                  for r in rows),
+    ),
+    Claim(
+        "linger=0 disables cross-event coalescing (within 25% of "
+        "unbatched); a 50us window restores the batching win",
+        lambda rows: (
+            pick(rows, workload="CN-W/posix", batch=BATCH,
+                 linger_us=0.0)["read_bw"]
+            <= 1.25 * pick(rows, workload="CN-W/posix",
+                           batch=0)["read_bw"]
+        ) and (
+            pick(rows, workload="CN-W/posix", batch=BATCH,
+                 linger_us=50.0)["read_bw"]
+            > 1.5 * pick(rows, workload="CN-W/posix", batch=0)["read_bw"]
+        ),
+        requires=lambda rows: any(r.get("linger_us") == 0.0 for r in rows),
+    ),
+    Claim(
+        "write bandwidth non-increasing as linger grows past the "
+        "coalescing window (queue-hold delay only)",
+        lambda rows: pick(rows, workload="CN-W/posix", batch=BATCH,
+                          linger_us=1000.0)["read_bw"]
+        <= 1.02 * pick(rows, workload="CN-W/posix", batch=BATCH,
+                       linger_us=50.0)["read_bw"],
+        requires=lambda rows: any(r.get("linger_us") == 1000.0
+                                  for r in rows),
     ),
 ]

@@ -18,12 +18,13 @@ correctness is testable end-to-end.
 from __future__ import annotations
 
 import itertools
-import zlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.intervals import BufferIntervalMap, Interval, OwnerIntervalMap
+from repro.core.routing import (DEFAULT_STRIPE, StaticRouter, make_router,
+                                shard_of)
 
 
 class BFSError(Exception):
@@ -50,20 +51,26 @@ class Event:
     kind: EventKind
     client: int                      # issuing client (node id encoded by caller)
     nbytes: int = 0
-    rpc_type: str = ""               # attach/detach/query/stat
+    rpc_type: str = ""               # attach/detach/query/stat/migrate
     peer: int = -1                   # transfer peer (owner for NET_TRANSFER)
     seq: int = 0                     # global issue order
     rpc_ranges: int = 1              # range descriptors in an RPC payload
     shard: int = 0                   # metadata-server shard handling an RPC
+    rpc_calls: int = 1               # client calls coalesced into this RPC
+    flush: str = ""                  # send-queue close reason ("" = unqueued)
+    linger: float = 0.0              # residual queue-hold delay charged (s)
 
 
 class EventLedger:
     """Append-only record of every I/O and RPC event in issue order.
 
-    Batched RPCs are represented by *editing in place* the still-open RPC
-    event (more ranges, more bytes) rather than appending a new one; the
-    event keeps the seq of the first coalesced call.  ``on_barrier`` hooks
-    let the server's RPC batcher close open batches at phase boundaries.
+    A batched RPC is recorded ONCE, at the position where the client's
+    send queue flushes it (see :class:`RPCBatcher`) — never back-dated to
+    the first coalesced call, so a coalesced member can never appear
+    before interleaved data events it logically follows.  ``on_barrier``
+    hooks let the batcher close open queues at phase boundaries;
+    ``pre_record`` hooks let a zero-linger queue flush before any
+    intervening event by the same client is appended.
     """
 
     def __init__(self) -> None:
@@ -71,20 +78,17 @@ class EventLedger:
         self._seq = itertools.count()
         self.client_node: Dict[int, int] = {}  # client id -> node id
         self.on_barrier: List[Callable[[], None]] = []
+        self.pre_record: List[Callable[[EventKind, int], None]] = []
 
     def record(self, kind: EventKind, client: int, nbytes: int = 0,
                rpc_type: str = "", peer: int = -1, rpc_ranges: int = 1,
-               shard: int = 0) -> None:
+               shard: int = 0, rpc_calls: int = 1, flush: str = "",
+               linger: float = 0.0) -> None:
+        for hook in self.pre_record:
+            hook(kind, client)
         self.events.append(
             Event(kind, client, nbytes, rpc_type, peer, next(self._seq),
-                  rpc_ranges, shard)
-        )
-
-    def merge_into(self, idx: int, nbytes: int, nranges: int) -> None:
-        """Grow the RPC event at ``idx`` by a coalesced batch member."""
-        e = self.events[idx]
-        self.events[idx] = replace(
-            e, nbytes=e.nbytes + nbytes, rpc_ranges=e.rpc_ranges + nranges
+                  rpc_ranges, shard, rpc_calls, flush, linger)
         )
 
     def mark_phase(self, name: str) -> None:
@@ -142,20 +146,11 @@ class UnderlyingPFS:
 # --------------------------------------------------------------------------
 # Global server (paper §5.1.2), generalized to N hash-partitioned shards
 # with client-side RPC batching.  ``num_shards=1, batch=0`` reproduces the
-# paper's single-threaded global server byte-for-byte.
+# paper's single-threaded global server byte-for-byte.  Stripe-to-shard
+# routing (fixed or adaptive) lives in :mod:`repro.core.routing`;
+# ``DEFAULT_STRIPE`` and ``shard_of`` are re-exported here for
+# compatibility.
 # --------------------------------------------------------------------------
-#: Metadata stripe width: byte range [k*stripe, (k+1)*stripe) of a file is
-#: owned by shard (crc32(path) + k) % num_shards.  64KB keeps the paper's
-#: 8KB accesses single-shard while spreading them uniformly over shards.
-DEFAULT_STRIPE = 64 * 1024
-
-
-def shard_of(path: str, offset: int, num_shards: int,
-             stripe: int = DEFAULT_STRIPE) -> int:
-    """Deterministic shard routing (stable across processes, unlike hash())."""
-    if num_shards <= 1:
-        return 0
-    return (zlib.crc32(path.encode()) + offset // stripe) % num_shards
 
 
 def _coalesce(ivs: List[Interval]) -> List[Interval]:
@@ -169,77 +164,151 @@ def _coalesce(ivs: List[Interval]) -> List[Interval]:
     return out
 
 
+#: Send-queue close reasons recorded in ``Event.flush``.
+FLUSH_SIZE = "size"        # the batch filled to ``max_ranges`` descriptors
+FLUSH_DEP = "dep"          # a dependent operation needed the RPC's answer
+FLUSH_FENCE = "fence"      # consistency-layer sync point (commit/close/sync)
+FLUSH_SWITCH = "switch"    # a different rpc type / file / shard followed
+FLUSH_BARRIER = "barrier"  # global phase barrier
+FLUSH_LINGER = "linger"    # zero-linger queue: intervening client activity
+FLUSH_CLOSE = "close"      # deployment drain (end of measured run)
+
+#: Reasons where the batch sat in the queue waiting for more members when
+#: it was forced out — the DES charges the configured linger hold for
+#: these (a conservative upper bound on the residual timer).
+LINGER_CHARGED = (FLUSH_BARRIER, FLUSH_CLOSE, FLUSH_LINGER)
+
+#: Default coalescing window when batching is enabled (seconds).
+DEFAULT_LINGER = 50e-6
+
+
 @dataclass
-class _OpenBatch:
-    """A still-coalescing RPC: (type, path, shard) plus its ledger slot."""
+class _SendQueue:
+    """A still-coalescing RPC in a client's send queue: (type, path, shard)."""
 
     key: Tuple[str, str, int]
-    event_idx: int
-    nranges: int
+    nbytes: int = 0
+    nranges: int = 0
+    calls: int = 0
 
 
 class RPCBatcher:
-    """Client-side coalescing of consecutive attach/query RPCs (opt-in).
+    """Modeled per-client send queues coalescing attach/query RPCs (opt-in).
 
-    A client's metadata calls are sent through a per-client send queue.
-    While the client keeps issuing the SAME rpc type on the SAME file (and
-    shard), the ranges are appended to the still-open RPC — one multi-range
-    message instead of N singletons — until ``max_ranges`` descriptors are
-    packed or a fence closes the batch.  Fences: any non-batchable RPC by
-    the client, a consistency-layer sync point (commit / session_close /
-    file_sync), and every ledger phase barrier.
+    A client's batchable metadata calls are *enqueued*, not recorded:
+    while the client keeps issuing the SAME rpc type on the SAME file and
+    shard, the ranges accumulate in its send queue.  The queue flushes —
+    appending ONE multi-range RPC event to the ledger at the flush
+    position — when any of these close triggers fires:
 
-    Metadata *content* is applied eagerly at call time (correctness is
-    exact); batching changes only how the RPC traffic is priced by the DES,
-    which sees one round-trip carrying ``rpc_ranges`` descriptors.  Note
-    the modeling assumption for queries: coalescing N consecutive lookups
-    models a *vectored* client that presents its next N offsets in one
-    message (true of the benchmark workloads, whose access lists are known
-    upfront) — for serially-dependent reads this is optimistic, which is
-    one reason batching is opt-in and fenced at every sync point.
+    * **size** — ``max_ranges`` descriptors are packed;
+    * **dep** — a dependent operation consumes the RPC's answer: a read
+      (``bfs_read``) flushes the reader's open *query* batch, and any
+      query/stat on a file flushes every client's open *attach* batch on
+      that file (its answer reflects those attaches, so they must have
+      been sent first);
+    * **fence** — a consistency-layer sync point (commit, session_close,
+      MPI file_sync) or any non-batchable RPC by the client;
+    * **switch** — the client issues a different (type, file, shard);
+    * **barrier** — a ledger phase barrier;
+    * **linger** — with a zero ``linger`` window the queue never holds a
+      batch across other client activity: any intervening non-RPC event
+      by the client sends the queue immediately (batching degenerates to
+      back-to-back coalescing only);
+    * **close** — :meth:`BaseFS.drain` at the end of a measured run.
+
+    Because the flush event is appended at flush time, a coalesced member
+    can never be priced before data events it logically follows — the DES
+    prices the whole batch at its flush position, plus a per-flush send
+    penalty and (for barrier/close/linger flushes) the residual queue-hold
+    ``linger``.  Metadata *content* is still applied eagerly at call time
+    (correctness is exact); only the RPC traffic's timing is modeled.
     """
 
     BATCHABLE = ("attach", "query")
 
-    def __init__(self, ledger: EventLedger, max_ranges: int = 0) -> None:
+    def __init__(self, ledger: EventLedger, max_ranges: int = 0,
+                 linger: Optional[float] = None) -> None:
         self.ledger = ledger
         self.max_ranges = max_ranges
-        self._open: Dict[int, _OpenBatch] = {}
-        ledger.on_barrier.append(self.fence_all)
+        self.linger = DEFAULT_LINGER if linger is None else float(linger)
+        self._open: Dict[int, _SendQueue] = {}
+        ledger.on_barrier.append(lambda: self.flush_all(FLUSH_BARRIER))
+        ledger.pre_record.append(self._on_client_activity)
 
     @property
     def enabled(self) -> bool:
         return self.max_ranges > 1
 
+    # ---- close triggers ----------------------------------------------
+    def flush(self, client: int, reason: str) -> None:
+        """Send the client's open batch: append its RPC event now."""
+        q = self._open.pop(client, None)
+        if q is None:
+            return
+        rpc_type, _path, shard = q.key
+        self.ledger.record(
+            EventKind.RPC, client, q.nbytes, rpc_type=rpc_type,
+            rpc_ranges=q.nranges, shard=shard, rpc_calls=q.calls,
+            flush=reason,
+            linger=self.linger if reason in LINGER_CHARGED else 0.0,
+        )
+
+    def flush_all(self, reason: str) -> None:
+        for client in list(self._open):
+            self.flush(client, reason)
+
     def fence(self, client: int) -> None:
-        """Close the client's open batch (sync point)."""
-        self._open.pop(client, None)
+        """Close the client's open batch (consistency-layer sync point)."""
+        self.flush(client, FLUSH_FENCE)
 
-    def fence_all(self) -> None:
-        self._open.clear()
+    def dep_flush_query(self, client: int) -> None:
+        """A read is about to consume the client's pending query answer."""
+        q = self._open.get(client)
+        if q is not None and q.key[0] == "query":
+            self.flush(client, FLUSH_DEP)
 
+    def dep_flush_attaches(self, path: str) -> None:
+        """A query/stat answer on ``path`` reflects every attach applied so
+        far — pending attach batches on the file must be sent first."""
+        for client, q in list(self._open.items()):
+            if q.key[0] == "attach" and q.key[1] == path:
+                self.flush(client, FLUSH_DEP)
+
+    def _on_client_activity(self, kind: EventKind, client: int) -> None:
+        # Zero-linger send queues never hold a batch while the client does
+        # other work; flush BEFORE the intervening event is appended.
+        if kind is EventKind.RPC or self.linger > 0.0:
+            return
+        if client in self._open:
+            self.flush(client, FLUSH_LINGER)
+
+    # ---- enqueue ------------------------------------------------------
     def submit(self, rpc_type: str, client: int, path: str, shard: int,
                nranges: int, nbytes: int) -> None:
-        """Record one RPC, coalescing into the client's open batch if legal."""
-        key = (rpc_type, path, shard)
-        ob = self._open.get(client)
-        if (
-            self.enabled
-            and rpc_type in self.BATCHABLE
-            and ob is not None
-            and ob.key == key
-            and ob.nranges + nranges <= self.max_ranges
-        ):
-            self.ledger.merge_into(ob.event_idx, nbytes, nranges)
-            ob.nranges += nranges
+        """Enqueue one RPC, coalescing into the client's send queue if legal;
+        non-batchable types flush the queue and record immediately."""
+        if not (self.enabled and rpc_type in self.BATCHABLE):
+            self.flush(client, FLUSH_SWITCH)
+            self.ledger.record(EventKind.RPC, client, nbytes,
+                               rpc_type=rpc_type, rpc_ranges=nranges,
+                               shard=shard)
             return
-        idx = len(self.ledger.events)
-        self.ledger.record(EventKind.RPC, client, nbytes, rpc_type=rpc_type,
-                           rpc_ranges=nranges, shard=shard)
-        if self.enabled and rpc_type in self.BATCHABLE:
-            self._open[client] = _OpenBatch(key, idx, nranges)
-        else:
-            self._open.pop(client, None)
+        key = (rpc_type, path, shard)
+        q = self._open.get(client)
+        if q is not None and q.key != key:
+            self.flush(client, FLUSH_SWITCH)
+            q = None
+        if q is not None and q.nranges + nranges > self.max_ranges:
+            self.flush(client, FLUSH_SIZE)
+            q = None
+        if q is None:
+            q = self._open[client] = _SendQueue(key)
+        q.nbytes += nbytes
+        q.nranges += nranges
+        q.calls += 1
+        if q.nranges >= self.max_ranges:
+            self.flush(client, FLUSH_SIZE)
 
 
 _EMPTY_TREE = OwnerIntervalMap()
@@ -260,63 +329,99 @@ class _ServerShard:
         return self.trees.get(path, _EMPTY_TREE)
 
 
+#: Client id charged for server-side stripe migrations (adaptive routing);
+#: forms its own DES chain, contending at the shard masters like any RPC.
+MIGRATOR_CLIENT = -2
+
+
 class GlobalServer:
     """Metadata service holding per-file owner interval trees.
 
     The paper's server is a single node: one master thread dispatching to a
     round-robin worker pool.  This implementation hash-partitions the
-    metadata over ``num_shards`` such servers — file stripes of
-    ``stripe`` bytes map to shards via :func:`shard_of` — so query/attach
-    load from many clients spreads over independent masters.  Task
-    *content* runs inline (we are single-process); queue *timing* is
-    replayed per shard by the DES.  With ``num_shards=1`` routing is a
-    no-op and runs match the paper's architecture exactly.
+    metadata over ``num_shards`` such servers — file stripes map to shards
+    via a :mod:`repro.core.routing` router (fixed-width crc32 round-robin
+    by default, access-size-adaptive widths + load rebalancing with
+    ``adaptive=True``) — so query/attach load from many clients spreads
+    over independent masters.  Task *content* runs inline (we are
+    single-process); queue *timing* is replayed per shard by the DES.
+    With ``num_shards=1`` routing is a no-op and runs match the paper's
+    architecture exactly.
     """
 
     def __init__(self, ledger: EventLedger, num_workers: int = 23,
                  num_shards: int = 1, stripe: int = DEFAULT_STRIPE,
-                 batch: int = 0) -> None:
+                 batch: int = 0, linger: Optional[float] = None,
+                 adaptive: bool = False) -> None:
         # Catalyst nodes have 24 cores: 1 master + 23 workers (per shard).
         self.ledger = ledger
         self.num_workers = num_workers
         self.num_shards = max(1, num_shards)
         self.stripe = stripe
+        self.router: StaticRouter = make_router(num_shards, stripe, adaptive)
         self.shards = [_ServerShard() for _ in range(self.num_shards)]
-        self.batcher = RPCBatcher(ledger, batch)
+        self.batcher = RPCBatcher(ledger, batch, linger)
 
     # ---- routing ------------------------------------------------------
     def _split_runs(
         self, path: str, runs: List[Tuple[int, int]]
     ) -> Dict[int, List[Tuple[int, int]]]:
         """Partition byte runs into per-shard stripe-aligned pieces."""
-        if self.num_shards == 1:
-            return {0: list(runs)}
-        by_shard: Dict[int, List[Tuple[int, int]]] = {}
-        for start, end in runs:
-            pos = start
-            while pos < end:
-                cut = min(end, (pos // self.stripe + 1) * self.stripe)
-                k = shard_of(path, pos, self.num_shards, self.stripe)
-                by_shard.setdefault(k, []).append((pos, cut))
-                pos = cut
-        return by_shard
+        return self.router.split_runs(path, runs)
+
+    def _observe(self, path: str, runs: List[Tuple[int, int]],
+                 by_shard: Dict[int, List[Tuple[int, int]]]) -> None:
+        """Feed the router's load stats and apply any re-layout it decides."""
+        self.router.observe(path, runs, by_shard)
+        for dirty in sorted(self.router.take_dirty()):
+            self._migrate(dirty)
+
+    def _migrate(self, path: str) -> None:
+        """Move ``path``'s interval trees to the router's new layout.
+
+        The rebalancing traffic is real: one ``migrate`` RPC per receiving
+        shard (priced by the DES at that shard's master) carrying the
+        moved range descriptors.
+        """
+        ivs: List[Interval] = []
+        for sh in self.shards:
+            tree = sh.trees.pop(path, None)
+            if tree is not None:
+                ivs.extend(tree)
+        if not ivs:
+            return
+        moved: Dict[int, int] = {}
+        for iv in ivs:
+            for k, pieces in self.router.split_runs(
+                    path, [(iv.start, iv.end)]).items():
+                tree = self.shards[k].tree(path)
+                for start, end in pieces:
+                    tree.attach(start, end, iv.value)
+                moved[k] = moved.get(k, 0) + len(pieces)
+        for k in sorted(moved):
+            self.ledger.record(EventKind.RPC, MIGRATOR_CLIENT,
+                               24 * moved[k], rpc_type="migrate",
+                               rpc_ranges=moved[k], shard=k)
 
     def submit(self, rpc_type: str, client: int, nbytes: int,
                shard: int = 0, nranges: int = 1, path: str = "") -> None:
-        """Record the RPC through the batcher; the DES replays the shard's
-        master dispatch + round-robin worker queues from the ledger."""
+        """Enqueue the RPC through the send-queue batcher; the DES replays
+        the shard's master dispatch + round-robin worker queues from the
+        ledger at the batch's flush position."""
         self.batcher.submit(rpc_type, client, path, shard, nranges, nbytes)
 
     # ---- RPC handlers -------------------------------------------------
     def attach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> None:
         # One RPC per involved shard packs that shard's range descriptors
         # (paper: "a single RPC request"; ~3x8B per descriptor).
-        for k, pieces in self._split_runs(path, runs).items():
+        by_shard = self._split_runs(path, runs)
+        for k, pieces in by_shard.items():
             self.submit("attach", client, 24 * len(pieces), shard=k,
                         nranges=len(pieces), path=path)
             tree = self.shards[k].tree(path)
             for start, end in pieces:
                 tree.attach(start, end, client)
+        self._observe(path, runs, by_shard)
 
     def detach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> bool:
         any_removed = False
@@ -329,18 +434,24 @@ class GlobalServer:
         return any_removed
 
     def query(self, client: int, path: str, start: int, end: int) -> List[Interval]:
+        # The answer reflects every attach applied so far — pending attach
+        # batches on this file must be sent (flushed) before the query.
+        self.batcher.dep_flush_attaches(path)
         found: List[Interval] = []
-        for k, pieces in self._split_runs(path, [(start, end)]).items():
+        by_shard = self._split_runs(path, [(start, end)])
+        for k, pieces in by_shard.items():
             self.submit("query", client, 24 * len(pieces), shard=k,
                         nranges=len(pieces), path=path)
             tree = self.shards[k].peek(path)
             for s, e in pieces:
                 found.extend(tree.owners(s, e))
+        self._observe(path, [(start, end)], by_shard)
         # Stitch stripe-split results back into maximal owner runs so the
         # read path issues the same transfers as the unsharded server.
         return _coalesce(found)
 
     def query_file(self, client: int, path: str) -> List[Interval]:
+        self.batcher.dep_flush_attaches(path)
         # Whole-file queries broadcast: every shard may own stripes.
         found: List[Interval] = []
         for k, sh in enumerate(self.shards):
@@ -351,9 +462,10 @@ class GlobalServer:
         return _coalesce(found)
 
     def stat_eof(self, client: int, path: str, pfs_size: int) -> int:
+        self.batcher.dep_flush_attaches(path)
         # The file's home shard serves stat (size attr is tracked there in
         # a real system); content-wise we take the max over all shards.
-        home = shard_of(path, 0, self.num_shards, self.stripe)
+        home = self.router.shard_for(path, 0)
         self.submit("stat", client, 16, shard=home, nranges=1, path=path)
         eof = max(sh.peek(path).max_end for sh in self.shards)
         return max(eof, pfs_size)
@@ -401,20 +513,32 @@ class BFSClient:
 
 
 #: Process-wide deployment topology used by ``BaseFS()`` when the caller
-#: does not pass explicit values: metadata-server shard count and RPC
-#: batch size (0 = off).  ``benchmarks.run --shards/--batch`` sets these
-#: so every figure (including SCR and DLIO, which build their own BaseFS)
-#: runs on the same deployment.
-TOPOLOGY = {"shards": 1, "batch": 0}
+#: does not pass explicit values: metadata-server shard count, RPC batch
+#: size (0 = off), send-queue linger window (seconds; None = default),
+#: stripe width (bytes) and adaptive routing.  ``benchmarks.run
+#: --shards/--batch/--linger/--stripe/--adaptive`` sets these so every
+#: figure (including SCR and DLIO, which build their own BaseFS) runs on
+#: the same deployment.
+TOPOLOGY = {"shards": 1, "batch": 0, "linger": None,
+            "stripe": DEFAULT_STRIPE, "adaptive": False}
 
 
 def set_topology(shards: Optional[int] = None,
-                 batch: Optional[int] = None) -> None:
-    """Set process-wide defaults for server shards / RPC batching."""
+                 batch: Optional[int] = None,
+                 linger: Optional[float] = None,
+                 stripe: Optional[int] = None,
+                 adaptive: Optional[bool] = None) -> None:
+    """Set process-wide defaults for the simulated deployment."""
     if shards is not None:
         TOPOLOGY["shards"] = shards
     if batch is not None:
         TOPOLOGY["batch"] = batch
+    if linger is not None:
+        TOPOLOGY["linger"] = linger
+    if stripe is not None:
+        TOPOLOGY["stripe"] = stripe
+    if adaptive is not None:
+        TOPOLOGY["adaptive"] = adaptive
 
 
 class BaseFS:
@@ -423,21 +547,28 @@ class BaseFS:
 
     Construct once per experiment; create clients with :meth:`client`.
     ``num_shards`` partitions the server metadata; ``batch`` > 1 enables
-    client-side RPC coalescing with that many range descriptors per
-    message.  ``None`` means "use the process-wide :data:`TOPOLOGY`";
-    the shipped defaults reproduce the paper's configuration.
+    client-side RPC send queues with that many range descriptors per
+    message; ``linger`` is the queue's coalescing window in seconds (0 =
+    send-immediate, ``None`` = :data:`DEFAULT_LINGER`); ``adaptive``
+    enables access-size stripe widths + load rebalancing.  ``None``
+    means "use the process-wide :data:`TOPOLOGY`"; the shipped defaults
+    reproduce the paper's configuration.
     """
 
     def __init__(self, num_workers: int = 23,
                  num_shards: Optional[int] = None,
-                 stripe: int = DEFAULT_STRIPE,
-                 batch: Optional[int] = None) -> None:
+                 stripe: Optional[int] = None,
+                 batch: Optional[int] = None,
+                 linger: Optional[float] = None,
+                 adaptive: Optional[bool] = None) -> None:
         self.ledger = EventLedger()
         self.server = GlobalServer(
             self.ledger, num_workers=num_workers,
             num_shards=TOPOLOGY["shards"] if num_shards is None else num_shards,
-            stripe=stripe,
+            stripe=TOPOLOGY["stripe"] if stripe is None else stripe,
             batch=TOPOLOGY["batch"] if batch is None else batch,
+            linger=TOPOLOGY["linger"] if linger is None else linger,
+            adaptive=(TOPOLOGY["adaptive"] if adaptive is None else adaptive),
         )
         self.pfs = UnderlyingPFS(self.ledger)
         self.clients: Dict[int, BFSClient] = {}
@@ -445,6 +576,14 @@ class BaseFS:
     def rpc_fence(self, c: "BFSClient") -> None:
         """Close the client's open RPC batch (consistency-layer sync point)."""
         self.server.batcher.fence(c.id)
+
+    def drain(self) -> None:
+        """Flush every open send queue (end of a measured run).
+
+        Call before replaying the ledger or reading aggregate counts so
+        tail batches still sitting in client send queues are accounted.
+        """
+        self.server.batcher.flush_all(FLUSH_CLOSE)
 
     def client(self, client_id: int, node: Optional[int] = None,
                tier: str = "ssd") -> BFSClient:
@@ -488,6 +627,10 @@ class BaseFS:
         owner == c.id -> local burst-buffer read.
         otherwise   -> client-to-client transfer (RDMA in the paper).
         """
+        # Dependency close trigger: the owner being read was resolved from
+        # a query answer — the reader's pending query batch must be sent
+        # (and, in the DES, completed) before this read can start.
+        self.server.batcher.dep_flush_query(c.id)
         f = c.files[h]
         start, end = f.pos, f.pos + size
         if owner is None:

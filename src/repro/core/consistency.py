@@ -40,9 +40,23 @@ class FileHandle:
 
 
 class _LayeredFS:
-    """Shared mechanics: owner-resolved reads, positioning, stat."""
+    """Shared mechanics: owner-resolved reads, positioning, stat.
+
+    Every layer declares its *fence points* — the operations at which the
+    client's RPC send queue must be flushed because the consistency model
+    makes metadata visibility observable there.  The explicit fences are:
+    ``CommitFS.commit``, ``SessionFS.session_close``,
+    ``MPIIOFS.file_sync`` / ``file_close``, and file ``close`` in every
+    layer (a closing client drains its send queue).  PosixFS has no
+    semantic sync point; its batches close only on the send queue's own
+    triggers (size cap, dependency, switch, barriers) — which is the
+    relaxation the fig3 posix-with-batching column quantifies.
+    """
 
     name = "base"
+    #: Layer operations that fence the RPC send queue (documentation +
+    #: introspection; the methods below call ``fs.rpc_fence`` themselves).
+    sync_points: Tuple[str, ...] = ("close",)
 
     def __init__(self, fs: Optional[BaseFS] = None) -> None:
         self.fs = fs or BaseFS()
@@ -55,6 +69,9 @@ class _LayeredFS:
         return FileHandle(c, h, path)
 
     def close(self, fh: FileHandle) -> int:
+        # Closing a file drains the client's send queue: a real client's
+        # outstanding metadata messages are flushed before close returns.
+        self.fs.rpc_fence(fh.client)
         return self.fs.bfs_close(fh.client, fh.bfs_handle)
 
     def seek(self, fh: FileHandle, offset: int, whence: int = SEEK_SET) -> int:
@@ -120,11 +137,17 @@ class PosixFS(_LayeredFS):
     With RPC batching enabled (``BaseFS(batch=N)``) the per-write attaches
     of a streaming writer coalesce into multi-range RPCs — the headline
     win, since PosixFS otherwise pays one server round-trip per write.
-    The layer has no sync point, so only the batcher's own fences (size
-    cap, type/file change, phase barrier) close a batch.
+    The layer has no semantic sync point, so only the send queue's own
+    close triggers apply: size cap, a read consuming a query answer, a
+    query on a file with pending attaches, type/file switch, and phase
+    barriers.  Strict POSIX makes every attach immediately observable;
+    the batched variant relaxes that by up to the coalescing window —
+    measured honestly by the DES at flush time, and kept consistent with
+    the content layer by the query-side dependency flush.
     """
 
     name = "posix"
+    sync_points = ("close",)
 
     def write(self, fh: FileHandle, data: bytes) -> int:
         fs, c, h = self.fs, fh.client, fh.bfs_handle
@@ -144,6 +167,7 @@ class CommitFS(_LayeredFS):
     """Commit consistency: attach only at commit; query before every read."""
 
     name = "commit"
+    sync_points = ("commit", "close")
 
     def write(self, fh: FileHandle, data: bytes) -> int:
         return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
@@ -174,6 +198,7 @@ class SessionFS(_LayeredFS):
     """
 
     name = "session"
+    sync_points = ("session_close", "close")
 
     def session_open(self, fh: FileHandle) -> None:
         owners = self.fs.bfs_query_file(fh.client, fh.bfs_handle)
@@ -214,6 +239,7 @@ class MPIIOFS(_LayeredFS):
     """
 
     name = "mpiio"
+    sync_points = ("file_sync", "file_close", "close")
 
     def file_open(self, client_id: int, path: str,
                   node: Optional[int] = None) -> FileHandle:

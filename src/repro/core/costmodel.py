@@ -21,6 +21,33 @@ Only the *time constants* are modeled; every count and byte replayed here
 was measured from the real (in-process) BaseFS execution.  This is the
 paper's own isolation argument one level up: the consistency model changes
 RPC placement, the ledger records the difference, the DES prices it.
+
+Issue-time vs flush-time costs
+------------------------------
+Data events (SSD/NET/MEM/PFS) are priced at their *issue* point: the
+event executes where it sits in the issuing client's chain, reserving the
+device FIFO from the client's current clock.  RPC events come in two
+flavours:
+
+* **unqueued** (``Event.flush == ""``, i.e. ``batch=0`` or a
+  non-batchable type) — also issue-time: the round trip starts at the
+  client's clock, exactly the pre-batching model;
+* **flushed batches** (``Event.flush`` names a close reason) — priced at
+  the batch's *flush* position in the chain, which by construction is at
+  or after every coalesced member's issue point (the ledger appends the
+  RPC when the send queue closes, never back-dated to the first member).
+  A flushed batch additionally pays ``batch_flush_lat`` (client-side
+  marshalling of the multi-range message, chain-only) and, when the
+  close reason implies the batch sat waiting for more members
+  (barrier/close/linger flushes), the residual queue-hold delay stamped
+  in ``Event.linger``.  Server-side per-range work (``task_per_range``)
+  is charged at the worker regardless of batching.
+
+Because the client chain is sequential, any operation recorded after a
+flushed RPC — e.g. a read that consumed a batched query's answer —
+blocks on the full round trip, which is exactly the visibility-timing
+honesty the paper's formal definitions require (a batched query can no
+longer answer "for free" before it was sent).
 """
 
 from __future__ import annotations
@@ -64,6 +91,7 @@ class HardwareConstants:
     net_op: float = 1e-6             # s, NIC per-message occupancy
     net_lat: float = 2e-6            # s, RDMA one-way (chain only)
     rpc_net_lat: float = 5e-6        # s, client<->server one way (chain)
+    batch_flush_lat: float = 3e-6    # s, per-flush multi-range marshal (chain)
     server_occupancy: float = 30e-6  # s, serialized master per RPC round trip
     task_service: float = 5e-6       # s, worker base service per task
     task_per_range: float = 0.2e-6   # s, per 24-byte range descriptor
@@ -122,7 +150,11 @@ class CostModel:
         self.hw = hw or HardwareConstants()
 
     # ------------------------------------------------------------------
-    def replay(self, ledger: EventLedger) -> List[PhaseResult]:
+    def replay(self, ledger: EventLedger,
+               trace: Optional[List[Tuple[Event, float, float]]] = None
+               ) -> List[PhaseResult]:
+        """Price the ledger; optionally append per-event ``(event, start,
+        finish)`` DES times to ``trace`` (used by the flush-timing tests)."""
         hw = self.hw
         node_of = dict(ledger.client_node)
         # Split the ledger at markers into phases.
@@ -177,6 +209,7 @@ class CostModel:
                 e = chains[c][idx[c]]
                 idx[c] += 1
                 t = clock[c]
+                start = t
                 node = node_of.get(c, c)
                 k, nb = e.kind, e.nbytes
                 if k is EventKind.SSD_WRITE:
@@ -215,7 +248,12 @@ class CostModel:
                     t = pfs.reserve(t, hw.pfs_op + nb / hw.pfs_bw) + hw.pfs_lat
                 elif k is EventKind.RPC:
                     rpc_count += 1
-                    arrive = t + hw.rpc_net_lat
+                    send = t
+                    if e.flush:
+                        # Flush-time costs for a send-queue batch: client
+                        # marshal penalty + residual queue-hold (linger).
+                        send += hw.batch_flush_lat + e.linger
+                    arrive = send + hw.rpc_net_lat
                     dispatched = res(shard_master, e.shard).reserve(
                         arrive, hw.server_occupancy
                     )
@@ -236,6 +274,8 @@ class CostModel:
                     shard_rr[e.shard] = (rr + 1) % len(workers)
                     t = done + hw.rpc_net_lat  # response back to client
                 bytes_by_kind[k] = bytes_by_kind.get(k, 0) + nb
+                if trace is not None:
+                    trace.append((e, start, t))
                 clock[c] = t
                 if idx[c] < len(chains[c]):
                     heapq.heappush(heap, (t, c))

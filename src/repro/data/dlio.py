@@ -145,6 +145,7 @@ class PreloadedStore:
                     stats.local_reads += 1
                 else:
                     stats.remote_reads += 1
+        self.fs.drain()  # flush tail send-queue batches before counting
         stats.queries = self.fs.ledger.count(EventKind.RPC, "query") - q0
         return stats
 

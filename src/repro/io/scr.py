@@ -203,6 +203,7 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
         ledger.record(EventKind.NET_TRANSFER, spare_cid,
                       cfg.bytes_per_rank, rpc_type="mem", peer=AUX + rank)
 
+    fs.drain()  # flush tail send-queue batches so the DES prices them
     phases = CostModel(hw).replay(ledger)
     rpcs = {
         t: ledger.count(EventKind.RPC, t)

@@ -148,17 +148,20 @@ def _read_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
 def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  hw: Optional[HardwareConstants] = None,
                  verify: bool = True, shards: Optional[int] = None,
-                 batch: Optional[int] = None) -> WorkloadResult:
+                 batch: Optional[int] = None,
+                 linger: Optional[float] = None,
+                 adaptive: Optional[bool] = None) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
-    per call unless the caller passes one in.  ``shards``/``batch``
-    override the process-wide :data:`TOPOLOGY` defaults for that fresh
-    BaseFS (ignored when ``fs`` is supplied); ``None`` already means "use
-    TOPOLOGY" inside ``BaseFS``.
+    per call unless the caller passes one in.  ``shards``/``batch``/
+    ``linger``/``adaptive`` override the process-wide :data:`TOPOLOGY`
+    defaults for that fresh BaseFS (ignored when ``fs`` is supplied);
+    ``None`` already means "use TOPOLOGY" inside ``BaseFS``.
     """
     if fs is None:
-        fs = BaseFS(num_shards=shards, batch=batch)
+        fs = BaseFS(num_shards=shards, batch=batch, linger=linger,
+                    adaptive=adaptive)
     layer = make_fs(cfg.model, fs)
     ledger = fs.ledger
 
@@ -227,9 +230,10 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
             if cfg.model == "session":
                 layer.session_close(rhandles[r])
 
+    fs.drain()  # flush tail send-queue batches so the DES prices them
     phases = CostModel(hw).replay(ledger)
     rpc_counts = {
         t: ledger.count(EventKind.RPC, t)
-        for t in ("attach", "query", "detach", "stat")
+        for t in ("attach", "query", "detach", "stat", "migrate")
     }
     return WorkloadResult(cfg, phases, verified, rpc_counts)

@@ -1,0 +1,213 @@
+"""Batching invariance + flush-timing regression tests.
+
+Invariance: any workload run with ``batch=N`` must return byte-identical
+reads and an identical final owner-tree state as ``batch=0`` — batching
+changes only how RPC traffic is timed, never what the metadata says.
+
+Timing regression: a batched RPC is priced by the DES at its *flush*
+position — never earlier than the issue point of its last coalesced
+member (the pre-fix batcher back-dated the whole batch to the first
+member's ledger slot, making batching optimistically free).
+"""
+
+import random
+
+import pytest
+
+from repro.core.basefs import BaseFS, EventKind
+from repro.core.consistency import make_fs
+from repro.core.costmodel import CostModel
+
+PATHS = ("/inv/a", "/inv/b")
+
+
+def _apply_script(fs, script):
+    """Run a (client, op, path, offset, size) script on PosixFS; return reads."""
+    layer = make_fs("posix", fs)
+    handles = {}
+    reads = []
+    for client, op, path, offset, size in script:
+        key = (client, path)
+        if key not in handles:
+            handles[key] = layer.open(client, path, node=client % 4)
+        fh = handles[key]
+        layer.seek(fh, offset)
+        if op == "write":
+            payload = bytes(((offset + i) * 31 + client) & 0xFF
+                            for i in range(size))
+            layer.write(fh, payload)
+        else:
+            reads.append(layer.read(fh, size))
+    fs.drain()
+    return reads
+
+
+def _owner_state(fs):
+    """Final server-side owner map, merged across shards, per path."""
+    state = {}
+    for path in PATHS:
+        ivs = []
+        for sh in fs.server.shards:
+            tree = sh.trees.get(path)
+            if tree is not None:
+                ivs.extend((iv.start, iv.end, iv.value) for iv in tree)
+        runs = []
+        for s, e, v in sorted(ivs):
+            if runs and runs[-1][1] == s and runs[-1][2] == v:
+                runs[-1] = (runs[-1][0], e, v)
+            else:
+                runs.append((s, e, v))
+        state[path] = runs
+    return state
+
+
+def _random_script(rng, n_ops=120, n_clients=4):
+    script = []
+    for _ in range(n_ops):
+        client = rng.randrange(n_clients)
+        path = rng.choice(PATHS)
+        offset = rng.randrange(0, 4096)
+        size = rng.randrange(1, 512)
+        op = "write" if rng.random() < 0.6 else "read"
+        script.append((client, op, path, offset, size))
+    return script
+
+
+def _check_invariance(script, batch, **kw):
+    base = BaseFS(batch=0)
+    batched = BaseFS(batch=batch, **kw)
+    reads0 = _apply_script(base, script)
+    reads1 = _apply_script(batched, script)
+    assert reads0 == reads1, "batched reads diverge from batch=0"
+    assert _owner_state(base) == _owner_state(batched), (
+        "batched final owner trees diverge from batch=0"
+    )
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("batch", (2, 4, 16))
+def test_batched_runs_equal_unbatched(seed, batch):
+    script = _random_script(random.Random(seed))
+    _check_invariance(script, batch)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_batched_sharded_runs_equal_unbatched(seed):
+    script = _random_script(random.Random(1000 + seed))
+    _check_invariance(script, 8, num_shards=4)
+
+
+def test_batched_runs_equal_unbatched_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    op = st.tuples(
+        st.integers(0, 3),
+        st.sampled_from(["write", "read"]),
+        st.sampled_from(list(PATHS)),
+        st.integers(0, 2048),
+        st.integers(1, 256),
+    )
+
+    @hypothesis.given(script=st.lists(op, min_size=1, max_size=60),
+                      batch=st.integers(2, 16))
+    @hypothesis.settings(deadline=None, max_examples=50)
+    def run(script, batch):
+        _check_invariance(script, batch)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Flush-timing regression (the PR's tentpole bugfix).
+# ---------------------------------------------------------------------------
+def test_batched_rpc_not_priced_before_last_member():
+    """A batched attach RPC starts at/after its last member's issue point.
+
+    The posix streaming writer issues write -> attach(enqueue) four times
+    per batch; each member's issue point is its SSD_WRITE event.  The
+    flush RPC must (a) appear in the ledger after ALL member writes — the
+    pre-fix batcher put it at the FIRST member's slot — and (b) be priced
+    by the DES no earlier than the last member write completes.
+    """
+    fs = BaseFS(batch=4)
+    pfs = make_fs("posix", fs)
+    fh = pfs.open(0, "/f")
+    for _ in range(12):
+        pfs.write(fh, b"x" * 64)
+    fs.drain()
+
+    trace = []
+    CostModel().replay(fs.ledger, trace=trace)
+    times = {e.seq: (start, finish) for e, start, finish in trace}
+
+    member_writes = []
+    checked = 0
+    for e in fs.ledger.events:
+        if e.kind is EventKind.SSD_WRITE:
+            member_writes.append(e)
+        elif e.kind is EventKind.RPC and e.rpc_type == "attach":
+            assert e.rpc_calls == len(member_writes)
+            # (a) ledger order: every member write precedes the flush.
+            assert all(w.seq < e.seq for w in member_writes)
+            # (b) DES pricing: RPC start >= last member's completion.
+            rpc_start = times[e.seq][0]
+            last_member_done = max(times[w.seq][1] for w in member_writes)
+            assert rpc_start >= last_member_done
+            member_writes = []
+            checked += 1
+    assert checked == 3  # 12 writes -> 4+4+4
+
+
+def test_dependent_read_blocks_on_query_round_trip():
+    """A read consuming a batched query's answer waits for the RPC."""
+    fs = BaseFS(batch=8)
+    cfs = make_fs("commit", fs)
+    w = cfs.open(0, "/f", node=0)
+    cfs.write(w, b"d" * 64)
+    cfs.commit(w)
+    r = cfs.open(1, "/f", node=1)
+    cfs.seek(r, 0)
+    assert cfs.read(r, 64) == b"d" * 64
+    fs.drain()
+
+    trace = []
+    CostModel().replay(fs.ledger, trace=trace)
+    reader = [(e, s, f) for e, s, f in trace if e.client == 1]
+    assert [e.kind for e, _s, _f in reader] == [EventKind.RPC,
+                                               EventKind.NET_TRANSFER]
+    (q, _qs, q_done), (_n, n_start, _nf) = reader
+    assert q.flush == "dep"
+    # The transfer starts only after the query round trip completes.
+    assert n_start >= q_done
+
+
+def test_batching_costs_more_than_backdating_but_less_than_unbatched():
+    """Honest flush pricing sits between 'free' and per-call RPCs."""
+    def makespan(batch):
+        fs = BaseFS(batch=batch)
+        pfs = make_fs("posix", fs)
+        fh = pfs.open(0, "/f")
+        fs.ledger.mark_phase("w")
+        for _ in range(64):
+            pfs.write(fh, b"x" * 1024)
+        fs.drain()
+        return CostModel().phase(fs.ledger, "w").duration
+
+    unbatched = makespan(0)
+    batched = makespan(16)
+    # Fewer round trips still win...
+    assert batched < unbatched
+    # ...but the flush penalty + round trips keep it nonzero-overhead
+    # versus pure device time (the old model priced batches ~free).
+    fs = BaseFS(batch=16)
+    pfs = make_fs("posix", fs)
+    fh = pfs.open(0, "/f")
+    fs.ledger.mark_phase("w")
+    for _ in range(64):
+        pfs.write(fh, b"x" * 1024)
+    fs.drain()
+    rpc_time = sum(
+        1 for e in fs.ledger.events if e.kind is EventKind.RPC
+    )
+    assert rpc_time == 4  # 64 coalesced 16-fold

@@ -1,0 +1,111 @@
+"""Golden-ledger regression: defaults reproduce the pre-send-queue output.
+
+The trace below was captured from the repository BEFORE the send-queue
+batcher landed (PR 1's edit-in-place batcher, with ``num_shards=1,
+batch=0``).  With batching off the batcher is pass-through, so the
+default deployment must reproduce this ledger *event for event* — same
+kinds, clients, byte counts, RPC types, peers, seqs, range counts and
+shards — across all four consistency layers plus stat/detach.
+"""
+
+from repro.core.basefs import BaseFS
+from repro.core.consistency import make_fs
+
+#: (kind.value, client, nbytes, rpc_type, peer, seq, rpc_ranges, shard)
+GOLDEN = [
+    ("ssd_write", 0, 64, "", -1, 0, 1, 0),
+    ("rpc", 0, 24, "attach", -1, 1, 1, 0),
+    ("ssd_write", 0, 64, "", -1, 2, 1, 0),
+    ("rpc", 0, 24, "attach", -1, 3, 1, 0),
+    ("ssd_write", 0, 64, "", -1, 4, 1, 0),
+    ("rpc", 0, 24, "attach", -1, 5, 1, 0),
+    ("rpc", 1, 24, "query", -1, 6, 1, 0),
+    ("net", 1, 192, "ssd", 0, 7, 1, 0),
+    ("ssd_write", 2, 100, "", -1, 8, 1, 0),
+    ("rpc", 2, 24, "attach", -1, 9, 1, 0),
+    ("rpc", 3, 24, "query", -1, 10, 1, 0),
+    ("net", 3, 100, "ssd", 2, 11, 1, 0),
+    ("rpc", 3, 16, "stat", -1, 12, 1, 0),
+    ("marker", -1, 0, "p2", -1, 13, 1, 0),
+    ("rpc", 4, 24, "query", -1, 14, 1, 0),
+    ("ssd_write", 4, 50, "", -1, 15, 1, 0),
+    ("rpc", 4, 24, "attach", -1, 16, 1, 0),
+    ("rpc", 5, 24, "query", -1, 17, 1, 0),
+    ("net", 5, 50, "ssd", 4, 18, 1, 0),
+    ("rpc", 6, 24, "query", -1, 19, 1, 0),
+    ("ssd_write", 6, 40, "", -1, 20, 1, 0),
+    ("rpc", 6, 24, "attach", -1, 21, 1, 0),
+    ("rpc", 6, 24, "query", -1, 22, 1, 0),
+    ("rpc", 7, 24, "query", -1, 23, 1, 0),
+    ("net", 7, 40, "ssd", 6, 24, 1, 0),
+    ("rpc", 0, 24, "detach", -1, 25, 1, 0),
+]
+
+
+def _golden_run() -> BaseFS:
+    fs = BaseFS()  # defaults: num_shards=1, batch=0
+    posix = make_fs("posix", fs)
+    commit = make_fs("commit", fs)
+    session = make_fs("session", fs)
+    mpiio = make_fs("mpiio", fs)
+
+    w = posix.open(0, "/g/a", node=0)
+    for j in range(3):
+        posix.seek(w, j * 64)
+        posix.write(w, bytes([j]) * 64)
+    r = posix.open(1, "/g/a", node=1)
+    posix.seek(r, 0)
+    assert posix.read(r, 192) == b"\0" * 64 + b"\1" * 64 + b"\2" * 64
+
+    cw = commit.open(2, "/g/b", node=1)
+    commit.write(cw, b"c" * 100)
+    commit.commit(cw)
+    cr = commit.open(3, "/g/b", node=0)
+    commit.seek(cr, 0)
+    assert commit.read(cr, 100) == b"c" * 100
+    assert commit.stat_size(cr) == 100
+
+    fs.ledger.mark_phase("p2")
+    sw = session.open(4, "/g/c", node=2)
+    session.session_open(sw)
+    session.write(sw, b"s" * 50)
+    session.session_close(sw)
+    sr = session.open(5, "/g/c", node=3)
+    session.session_open(sr)
+    session.seek(sr, 0)
+    assert session.read(sr, 50) == b"s" * 50
+    session.session_close(sr)
+
+    mw = mpiio.file_open(6, "/g/d", node=2)
+    mpiio.write(mw, b"m" * 40)
+    mpiio.file_sync(mw)
+    mr = mpiio.file_open(7, "/g/d", node=3)
+    mpiio.seek(mr, 0)
+    assert mpiio.read(mr, 40) == b"m" * 40
+    fs.bfs_detach(fs.clients[0], 1, 0, 64)
+    return fs
+
+
+def test_default_deployment_matches_pre_sendqueue_ledger():
+    fs = _golden_run()
+    got = [
+        (e.kind.value, e.client, e.nbytes, e.rpc_type, e.peer, e.seq,
+         e.rpc_ranges, e.shard)
+        for e in fs.ledger.events
+    ]
+    assert got == GOLDEN
+
+
+def test_default_deployment_has_no_sendqueue_artifacts():
+    fs = _golden_run()
+    # With batch=0 no event ever went through a send queue: the new
+    # Event fields must carry their pass-through defaults, so the DES
+    # prices the ledger exactly as the pre-send-queue model did.
+    assert all(
+        e.rpc_calls == 1 and e.flush == "" and e.linger == 0.0
+        for e in fs.ledger.events
+    )
+    # drain() on an idle deployment appends nothing.
+    n = len(fs.ledger.events)
+    fs.drain()
+    assert len(fs.ledger.events) == n

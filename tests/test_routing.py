@@ -1,0 +1,155 @@
+"""Adaptive stripe routing tests: width adaptation, rebalancing, migration.
+
+The static router must keep PR-1's exact layout (covered by the golden
+ledger + sharding tests); these tests cover the adaptive router: stripe
+widths tracking access sizes, load rebalancing under skewed offsets,
+content-preserving migration, and determinism.
+"""
+
+import random
+
+from repro.core.basefs import BaseFS, EventKind
+from repro.core.routing import (
+    DEFAULT_STRIPE,
+    MAX_STRIPE,
+    MIN_STRIPE,
+    AdaptiveRouter,
+    StaticRouter,
+    make_router,
+)
+
+MB = 1024 * 1024
+
+
+def _rpcs_per_shard(fs, rpc_type=None):
+    counts = {}
+    for e in fs.ledger.events:
+        if e.kind is EventKind.RPC and e.rpc_type != "migrate" and (
+                rpc_type is None or e.rpc_type == rpc_type):
+            counts[e.shard] = counts.get(e.shard, 0) + e.rpc_ranges
+    return counts
+
+
+def test_make_router_kinds():
+    assert isinstance(make_router(4), StaticRouter)
+    assert not isinstance(make_router(4), AdaptiveRouter)
+    assert isinstance(make_router(4, adaptive=True), AdaptiveRouter)
+
+
+def test_static_split_matches_shard_of_layout():
+    r = StaticRouter(4)
+    runs = [(0, 3 * DEFAULT_STRIPE)]
+    by_shard = r.split_runs("/f", runs)
+    # Three stripe pieces, each on its crc32 round-robin shard.
+    assert sum(len(p) for p in by_shard.values()) == 3
+    for k, pieces in by_shard.items():
+        for s, _e in pieces:
+            assert r.shard_for("/f", s) == k
+
+
+def test_adaptive_width_grows_to_match_large_accesses():
+    fs = BaseFS(num_shards=4, adaptive=True)
+    server = fs.server
+    path = "/big"
+    # 8MB attaches: under the fixed 64KiB layout each one shatters into
+    # 128 stripe pieces; the router must widen the stripe to match.
+    for j in range(40):
+        server.attach(0, path, [(j * 8 * MB, (j + 1) * 8 * MB)])
+    assert server.router.width(path) == MAX_STRIPE
+    # Post-adaptation accesses produce one piece per stripe of 8MiB.
+    by_shard = server.router.split_runs(path, [(0, 8 * MB)])
+    assert sum(len(p) for p in by_shard.values()) == 1
+
+
+def test_adaptive_width_shrinks_for_small_accesses():
+    fs = BaseFS(num_shards=4, adaptive=True)
+    server = fs.server
+    path = "/small"
+    server.attach(0, path, [(0, DEFAULT_STRIPE)])
+    for j in range(64):
+        server.query(1, path, (j * 8192) % DEFAULT_STRIPE,
+                     (j * 8192) % DEFAULT_STRIPE + 8192)
+    assert server.router.width(path) == MIN_STRIPE
+
+
+def test_skewed_offsets_rebalance_over_shards():
+    """All traffic on one hot 64KiB region: static keeps one shard hot,
+    adaptive spreads the load (narrower stripes + stripe moves)."""
+    def run(adaptive):
+        fs = BaseFS(num_shards=4, adaptive=adaptive)
+        server = fs.server
+        path = "/hot"
+        server.attach(0, path, [(0, DEFAULT_STRIPE)])
+        for j in range(512):
+            off = (j * 8192) % DEFAULT_STRIPE
+            server.query(1, path, off, off + 8192)
+        return _rpcs_per_shard(fs, "query")
+
+    static = run(False)
+    adaptive = run(True)
+    # Static: the single hot stripe pins every query to one shard.
+    assert len(static) == 1
+    # Adaptive: the hot region is re-striped over multiple shards and the
+    # hottest shard's share drops well below 100%.
+    assert len(adaptive) >= 2
+    total = sum(adaptive.values())
+    assert max(adaptive.values()) / total < 0.75
+
+
+def test_migration_preserves_owner_content():
+    """Random attach/query traffic with migrations: answers must always
+    match a plain unsharded reference server."""
+    rng = random.Random(7)
+    ref = BaseFS()
+    ada = BaseFS(num_shards=4, adaptive=True)
+    path = "/mix"
+    size = 2 * MB
+    for step in range(300):
+        if rng.random() < 0.5:
+            start = rng.randrange(0, size - 1)
+            end = min(size, start + rng.choice((4096, 8192, 512 * 1024)))
+            owner = rng.randrange(8)
+            ref.server.attach(owner, path, [(start, end)])
+            ada.server.attach(owner, path, [(start, end)])
+        else:
+            start = rng.randrange(0, size - 1)
+            end = rng.randrange(start + 1, size + 1)
+            a = [(iv.start, iv.end, iv.value)
+                 for iv in ref.server.query(99, path, start, end)]
+            b = [(iv.start, iv.end, iv.value)
+                 for iv in ada.server.query(99, path, start, end)]
+            assert a == b, f"divergence at step {step}"
+    assert (ref.server.stat_eof(99, path, 0)
+            == ada.server.stat_eof(99, path, 0))
+
+
+def test_migration_traffic_is_priced_not_free():
+    fs = BaseFS(num_shards=4, adaptive=True)
+    server = fs.server
+    path = "/big"
+    for j in range(40):
+        server.attach(0, path, [(j * 8 * MB, (j + 1) * 8 * MB)])
+    migrates = [e for e in fs.ledger.events
+                if e.kind is EventKind.RPC and e.rpc_type == "migrate"]
+    assert migrates, "re-layout must record migrate RPCs"
+    assert all(e.nbytes == 24 * e.rpc_ranges for e in migrates)
+
+
+def test_adaptive_routing_is_deterministic():
+    def run():
+        fs = BaseFS(num_shards=4, adaptive=True)
+        server = fs.server
+        rng = random.Random(21)
+        for _ in range(256):
+            path = rng.choice(("/a", "/b"))
+            start = rng.randrange(0, MB)
+            end = min(MB, start + rng.choice((8192, 65536, 512 * 1024)))
+            if rng.random() < 0.5:
+                server.attach(rng.randrange(4), path, [(start, end)])
+            else:
+                server.query(5, path, start, end)
+        fs.drain()
+        return [(e.kind.value, e.client, e.rpc_type, e.shard, e.rpc_ranges)
+                for e in fs.ledger.events]
+
+    assert run() == run()

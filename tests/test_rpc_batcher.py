@@ -1,4 +1,10 @@
-"""RPC batcher unit tests: coalescing boundaries + shard routing determinism."""
+"""RPC send-queue unit tests: flush triggers, ordering, shard routing.
+
+The batcher models a per-client send queue: batchable RPCs are enqueued
+and the ledger records ONE multi-range RPC event at the queue's *flush*
+position (size cap / dependency / fence / switch / barrier / drain) —
+never back-dated to the first coalesced call.
+"""
 
 import pytest
 
@@ -24,11 +30,27 @@ class TestCoalescing:
         fh = pfs.open(0, "/f")
         for _ in range(10):
             pfs.write(fh, b"x" * 64)
+        fs.drain()
         attaches = _rpc_events(fs, "attach")
-        # 10 single-range attaches packed 4+4+2.
+        # 10 single-range attaches packed 4+4+2; the 4-range batches close
+        # at the size cap, the tail closes at the drain.
         assert [e.rpc_ranges for e in attaches] == [4, 4, 2]
+        assert [e.rpc_calls for e in attaches] == [4, 4, 2]
+        assert [e.flush for e in attaches] == ["size", "size", "close"]
         # Payload grows with the batch: 24B per range descriptor.
         assert all(e.nbytes == 24 * e.rpc_ranges for e in attaches)
+
+    def test_flush_never_precedes_members(self):
+        # The batched RPC event sits AFTER every coalesced member's data
+        # event — the honest flush-time ordering (old code back-dated the
+        # RPC to the first member's ledger position).
+        fs = BaseFS(batch=4)
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        for _ in range(4):
+            pfs.write(fh, b"x" * 64)
+        kinds = [e.kind for e in fs.ledger.events]
+        assert kinds == [EventKind.SSD_WRITE] * 4 + [EventKind.RPC]
 
     def test_batch_disabled_by_default(self):
         fs = BaseFS()
@@ -36,7 +58,23 @@ class TestCoalescing:
         fh = pfs.open(0, "/f")
         for _ in range(5):
             pfs.write(fh, b"x" * 64)
-        assert len(_rpc_events(fs, "attach")) == 5
+        attaches = _rpc_events(fs, "attach")
+        assert len(attaches) == 5
+        # Pass-through RPCs never went through a send queue.
+        assert all(e.flush == "" and e.rpc_calls == 1 for e in attaches)
+
+    def test_zero_linger_disables_cross_event_coalescing(self):
+        # A zero-linger queue never holds a batch across other client
+        # activity: streaming posix writes degenerate to per-write RPCs.
+        fs = BaseFS(batch=4, linger=0.0)
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        for _ in range(5):
+            pfs.write(fh, b"x" * 64)
+        fs.drain()
+        attaches = _rpc_events(fs, "attach")
+        assert [e.rpc_ranges for e in attaches] == [1] * 5
+        assert all(e.flush == "linger" for e in attaches[:-1])
 
     def test_type_change_closes_batch(self):
         fs = BaseFS(batch=16)
@@ -46,6 +84,7 @@ class TestCoalescing:
         fs.bfs_attach(c, h, 0, 50)
         fs.bfs_query(c, h, 0, 10)      # different type: not merged
         fs.bfs_attach(c, h, 50, 50)    # new attach batch
+        fs.drain()
         assert len(_rpc_events(fs, "attach")) == 2
         assert len(_rpc_events(fs, "query")) == 1
 
@@ -56,6 +95,7 @@ class TestCoalescing:
         pfs.write(fa, b"x" * 8)
         pfs.write(fb, b"x" * 8)
         pfs.write(fa, b"x" * 8)
+        fs.drain()
         # Alternating files: no two consecutive same-file attaches.
         assert len(_rpc_events(fs, "attach")) == 3
 
@@ -67,6 +107,7 @@ class TestCoalescing:
             pfs.seek(f0, pfs.tell(f0))
             pfs.write(f0, b"x" * 8)
             pfs.write(f1, b"y" * 8)
+        fs.drain()
         attaches = _rpc_events(fs, "attach")
         assert len(attaches) == 2
         assert sorted(e.client for e in attaches) == [0, 1]
@@ -79,7 +120,26 @@ class TestCoalescing:
         pfs.write(fh, b"x" * 8)
         fs.ledger.mark_phase("next")
         pfs.write(fh, b"x" * 8)
-        assert len(_rpc_events(fs, "attach")) == 2
+        fs.drain()
+        attaches = _rpc_events(fs, "attach")
+        assert len(attaches) == 2
+        assert attaches[0].flush == "barrier"
+        # The barrier-closed batch lingered in the queue: the DES charges
+        # the residual hold, stamped on the event.
+        assert attaches[0].linger > 0.0
+        # The barrier flush lands BEFORE the phase marker.
+        marker_seq = next(e.seq for e in fs.ledger.events
+                          if e.kind is EventKind.MARKER)
+        assert attaches[0].seq < marker_seq
+
+    def test_file_close_fences_batch(self):
+        fs = BaseFS(batch=16)
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        pfs.write(fh, b"x" * 8)
+        pfs.close(fh)  # closing drains the client's send queue
+        attaches = _rpc_events(fs, "attach")
+        assert len(attaches) == 1 and attaches[0].flush == "fence"
 
     def test_commit_fences_batch(self):
         fs = BaseFS(batch=16)
@@ -92,9 +152,15 @@ class TestCoalescing:
         cfs.commit(fh)
         # The fence at the first commit prevents the second commit's
         # attach from merging into the first RPC.
-        assert len(_rpc_events(fs, "attach")) == 2
+        attaches = _rpc_events(fs, "attach")
+        assert len(attaches) == 2
+        assert all(e.flush == "fence" for e in attaches)
 
-    def test_query_coalescing_in_commit_reads(self):
+    def test_reads_force_query_flush(self):
+        # THE bugfix: a read consumes its query's answer, so the pending
+        # query RPC must be sent (and priced) before the read — commit
+        # reads can no longer coalesce their serially-dependent queries
+        # into one optimistically-free vectored RPC.
         fs = BaseFS(batch=8)
         cfs = CommitFS(fs)
         w = cfs.open(0, "/f")
@@ -106,18 +172,41 @@ class TestCoalescing:
             cfs.seek(r, j * 16)
             assert cfs.read(r, 16) == b"d" * 16
         queries = [e for e in _rpc_events(fs, "query") if e.client == 1]
-        # 8 consecutive single-range queries coalesce into one 8-range RPC.
-        assert len(queries) == 1 and queries[0].rpc_ranges == 8
+        assert len(queries) == 8
+        assert all(e.flush == "dep" and e.rpc_ranges == 1 for e in queries)
+        # Ledger order: every data read is preceded by its flushed query.
+        reader = [e for e in fs.ledger.events if e.client == 1]
+        kinds = [e.kind for e in reader]
+        assert kinds == [EventKind.RPC, EventKind.NET_TRANSFER] * 8
 
-    def test_eager_visibility_while_batch_open(self):
-        # Metadata content applies at call time: a reader immediately sees
-        # ranges whose RPC is still coalescing in the writer's batch.
+    def test_query_forces_pending_attach_flush(self):
+        # A query's answer reflects every attach applied so far, so a
+        # reader's query flushes the writer's still-open attach batch —
+        # the attach RPC is in the ledger before the query that saw it.
         fs = BaseFS(batch=16)
         pfs = PosixFS(fs)
         w = pfs.open(0, "/f")
         pfs.write(w, b"live data!")
         r = pfs.open(1, "/f")
         assert pfs.read(r, 10) == b"live data!"
+        attaches = _rpc_events(fs, "attach")
+        queries = _rpc_events(fs, "query")
+        assert len(attaches) == 1 and attaches[0].flush == "dep"
+        assert len(queries) == 1
+        assert attaches[0].seq < queries[0].seq
+
+    def test_batches_still_coalesce_without_dependent_reads(self):
+        # Queries with no consuming read (pure lookups) still coalesce.
+        fs = BaseFS(batch=8)
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"z" * 256)
+        fs.bfs_attach(c, h, 0, 256)
+        for j in range(8):
+            fs.bfs_query(c, h, j * 32, 32)
+        fs.drain()
+        queries = _rpc_events(fs, "query")
+        assert len(queries) == 1 and queries[0].rpc_ranges == 8
 
 
 class TestShardRouting:
@@ -150,6 +239,7 @@ class TestShardRouting:
             for j in range(8):
                 pfs.seek(r, j * DEFAULT_STRIPE)
                 assert pfs.read(r, 1024) == b"z" * 1024
+            fs.drain()
             return [(e.rpc_type, e.client, e.shard, e.rpc_ranges)
                     for e in _rpc_events(fs)]
 
