@@ -1,7 +1,14 @@
 PYTHON ?= python
+RUFF ?= ruff
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-fig7 bench-smoke
+# Formatting ratchet: files verified to conform to `ruff format`.  Run
+# `ruff format <file>` and add it here; once the list covers the tree,
+# replace it with the bare directories.  (`ruff check` already runs
+# repo-wide — only the formatter is ratcheted.)
+FMT_PATHS := benchmarks/__init__.py
+
+.PHONY: test test-fast lint bench bench-fig7 bench-fig8 bench-smoke
 
 # Tier-1 verification target (same invocation as ROADMAP.md).
 test:
@@ -11,11 +18,19 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
+# Lint gate (same invocation as the CI `lint` job; see ruff.toml).
+lint:
+	$(RUFF) check src benchmarks tests examples
+	$(RUFF) format --check $(FMT_PATHS)
+
 bench:
 	$(PYTHON) -m benchmarks.run --fast
 
 bench-fig7:
 	$(PYTHON) -m benchmarks.run --only fig7 --fast
+
+bench-fig8:
+	$(PYTHON) -m benchmarks.run --only fig8 --fast
 
 # One minimal point per figure through the benchmarks.run machinery.
 bench-smoke:

@@ -1,0 +1,1 @@
+"""Benchmark drivers: one module per paper figure, driven by ``benchmarks.run``."""

@@ -28,20 +28,26 @@ KB = 1024
 MB = 1024 * 1024
 
 
+def csv_fieldnames(rows: List[Dict]) -> List[str]:
+    """Deterministic header union: the first row's keys in their
+    declaration order, then every extra key any later row carries, in
+    SORTED order.  First-seen ordering of the extras would make the
+    header depend on which grid point happened to run first — golden
+    CSVs under different ``--fast``/``--only`` grids would silently
+    reorder columns."""
+    keys = list(rows[0].keys())
+    seen = set(keys)
+    extras = sorted({k for r in rows[1:] for k in r.keys()} - seen)
+    return keys + extras
+
+
 def save_csv(name: str, rows: List[Dict]) -> str:
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
     path = os.path.abspath(os.path.join(ARTIFACT_DIR, f"{name}.csv"))
     if not rows:
         return path
-    # Union the keys over ALL rows (first-seen order): later rows may
-    # carry columns the first row lacks (e.g. sharded-variant fields).
-    keys: List[str] = []
-    for r in rows:
-        for k in r.keys():
-            if k not in keys:
-                keys.append(k)
     with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=keys, restval="")
+        w = csv.DictWriter(f, fieldnames=csv_fieldnames(rows), restval="")
         w.writeheader()
         w.writerows(rows)
     return path

@@ -21,16 +21,25 @@ Expected outcome (validated by CLAIMS):
  5. the batching win needs a nonzero coalescing window: with ``linger=0``
     the send queue never holds a batch across other client work and the
     "batched" run degenerates to per-call RPCs,
- 6. growing the linger beyond the coalescing need only adds queue-hold
-    delay: write bandwidth is non-increasing in the linger sweep.
+ 6. under the time-driven DES the queue timer is priced exactly: growing
+    the linger past the coalescing need no longer costs a flat residual
+    hold, so write bandwidth stays flat (non-increasing) in the linger
+    sweep,
+ 7. joint ``batch x linger`` sweep: deeper send queues flush fewer,
+    larger RPCs at every nonzero window (the trade-off surface the
+    ROADMAP asked for),
+ 8. CKPT-W overlap: a checkpoint writer that drains its burst buffer to
+    the PFS in-phase keeps its tail attach batch open across the drain —
+    the queue timer expires mid-phase and the flush round trip overlaps
+    the PFS traffic (asserted event-level in tests/test_des_timing.py).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from benchmarks.common import KB, Claim, pick, scales
-from repro.io.workloads import TOPOLOGY, cn_w, rn_r, run_workload
+from repro.io.workloads import TOPOLOGY, ckpt_w, cn_w, rn_r, run_workload
 
 SHARDS = (1, 2, 4, 8)
 NODES = (16, 32, 64)        # x16 procs/node -> 256..1024 clients
@@ -40,15 +49,18 @@ M_OPS = 10
 ACCESS = 8 * KB
 BATCH = 16                  # range descriptors per batched RPC
 LINGER_US = (0.0, 50.0, 200.0, 1000.0)   # send-queue window sweep (us)
+JOINT_BATCH = (4, 16, 64)   # joint batch x linger sweep grid
+CKPT_LINGER_US = (50.0, 1000.0)          # ckpt-drain overlap windows
 
 
-def _posix_write_row(n: int, batch: int, linger_us) -> Dict:
-    cfg = cn_w(n, ACCESS, "posix", p=PROCS, m=M_OPS)
+def _write_row(factory, workload: str, n: int, batch: int,
+               linger_us: Optional[float]) -> Dict:
+    cfg = factory(n, ACCESS, "posix", p=PROCS, m=M_OPS)
     res = run_workload(cfg, shards=1, batch=batch,
                        linger=None if linger_us is None
                        else linger_us * 1e-6)
     return {
-        "workload": "CN-W/posix", "clients": cfg.n * PROCS,
+        "workload": workload, "clients": cfg.n * PROCS,
         "shards": 1, "batch": batch,
         "linger_us": "" if linger_us is None else linger_us,
         "model": "posix",
@@ -56,6 +68,14 @@ def _posix_write_row(n: int, batch: int, linger_us) -> Dict:
         "rpc_query": res.rpc_counts["attach"],  # attach RPC count
         "verified": 0,
     }
+
+
+def _posix_write_row(n: int, batch: int, linger_us) -> Dict:
+    return _write_row(cn_w, "CN-W/posix", n, batch, linger_us)
+
+
+def _ckpt_write_row(n: int, batch: int, linger_us) -> Dict:
+    return _write_row(ckpt_w, "CKPT-W/posix", n, batch, linger_us)
 
 
 def run(fast: bool = False) -> List[Dict]:
@@ -80,11 +100,18 @@ def run(fast: bool = False) -> List[Dict]:
     n = nodes[-1]
     for b in (0, BATCH):
         rows.append(_posix_write_row(n, b, None))
-    # Linger sweep: honest flush timing makes the coalescing window a
-    # measurable knob — zero disables cross-event coalescing, large
-    # values only add queue-hold delay at barriers.
-    for linger_us in LINGER_US:
-        rows.append(_posix_write_row(n, BATCH, linger_us))
+    # Joint batch x linger sweep: the time-driven DES prices the queue
+    # timer exactly — zero disables cross-event coalescing, any nonzero
+    # window buys the full coalescing win, deeper queues flush fewer,
+    # larger RPCs.
+    for b in JOINT_BATCH:
+        for linger_us in LINGER_US:
+            rows.append(_posix_write_row(n, b, linger_us))
+    # Checkpoint-drain overlap: tail attach batches close mid-phase (on
+    # the queue timer) while the burst buffer drains to the PFS.
+    rows.append(_ckpt_write_row(n, 0, None))
+    for linger_us in CKPT_LINGER_US:
+        rows.append(_ckpt_write_row(n, BATCH, linger_us))
     return rows
 
 
@@ -164,6 +191,40 @@ CLAIMS = [
         <= 1.02 * pick(rows, workload="CN-W/posix", batch=BATCH,
                        linger_us=50.0)["read_bw"],
         requires=lambda rows: any(r.get("linger_us") == 1000.0
+                                  for r in rows),
+    ),
+    Claim(
+        "joint batch x linger sweep: at every nonzero window, deeper "
+        "send queues flush fewer attach RPCs and write no slower",
+        lambda rows: all(
+            pick(rows, workload="CN-W/posix", batch=JOINT_BATCH[-1],
+                 linger_us=lu)["rpc_query"]
+            < pick(rows, workload="CN-W/posix", batch=JOINT_BATCH[0],
+                   linger_us=lu)["rpc_query"]
+            and pick(rows, workload="CN-W/posix", batch=JOINT_BATCH[-1],
+                     linger_us=lu)["read_bw"]
+            >= 0.98 * pick(rows, workload="CN-W/posix",
+                           batch=JOINT_BATCH[0], linger_us=lu)["read_bw"]
+            for lu in scales(rows, "linger_us", workload="CN-W/posix",
+                             batch=JOINT_BATCH[0])
+            if lu != 0.0
+        ),
+        requires=lambda rows: all(
+            any(r["workload"] == "CN-W/posix" and r["batch"] == b
+                for r in rows) for b in (JOINT_BATCH[0], JOINT_BATCH[-1])),
+    ),
+    Claim(
+        "CKPT-W drain overlap: batched attach flushes close mid-phase on "
+        "the queue timer and overlap the PFS drain — batched checkpoint "
+        "bandwidth beats unbatched",
+        lambda rows: all(
+            pick(rows, workload="CKPT-W/posix", batch=BATCH,
+                 linger_us=lu)["read_bw"]
+            >= 1.1 * pick(rows, workload="CKPT-W/posix",
+                          batch=0)["read_bw"]
+            for lu in CKPT_LINGER_US
+        ),
+        requires=lambda rows: any(r["workload"] == "CKPT-W/posix"
                                   for r in rows),
     ),
 ]

@@ -1,0 +1,130 @@
+"""Fig 8 (extension) — hot-region skewed reads vs. the adaptive router.
+
+The paper's RN-R workload spreads reads uniformly, so crc32 round-robin
+striping balances the metadata shards by construction.  Real DL / burst
+analytics traffic is skewed: a few hot blocks absorb most of the reads.
+This figure reads ``HOT_FRAC`` of all accesses from a ``HOT_BLOCKS``-block
+region at the head of the shared file (128 KiB by default — just TWO
+64 KiB metadata stripes), so under static striping at 8 shards ~90% of
+the commit-model query RPCs serialize at two masters while six idle.
+
+The adaptive router (:mod:`repro.core.routing`, ``BaseFS(adaptive=True)``)
+counters with access-size-matched stripe widths (the 8 KB accesses shrink
+the stripe to 8 KiB, fanning the hot region over every shard) plus
+load-driven stripe moves; the resulting re-layouts are *paid for* — the
+server records ``migrate`` RPCs that the DES schedules on the same
+virtual clock as the triggering access (``rpc_migrate`` column).
+
+Expected outcome (validated by CLAIMS):
+ 1. static striping leaves the hot-region commit reads near the
+    single-shard bandwidth — adding shards alone does not fix skew,
+ 2. adaptive routing beats static striping on the hot-region RN-R
+    workload at 8 shards (the rebalanced layout spreads the hot queries),
+ 3. the adaptive runs actually pay migration traffic (rpc_migrate > 0),
+ 4. session reads resolve owners from the session-open snapshot and are
+    routing-insensitive.
+
+Reads are verified byte-for-byte; the skew generator is seeded
+(``benchmarks.run --seed``) and reproducible.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import KB, Claim, pick, scales
+from repro.io.workloads import rn_r_hot, run_workload
+
+NODES = (16, 32)            # x16 procs/node -> 256/512 clients
+FAST_NODES = (16,)
+PROCS = 16
+M_OPS = 10
+ACCESS = 8 * KB
+SHARDS = 8                  # sharded deployment under test
+HOT_FRAC = 0.9              # P(read lands in the hot region)
+HOT_BLOCKS = 16             # hot region: 16 x 8KB = two 64KiB stripes
+
+
+def _row(n: int, model: str, shards: int, adaptive: bool,
+         seed: int) -> Dict:
+    cfg = rn_r_hot(n, ACCESS, model, p=PROCS, m=M_OPS, seed=seed,
+                   hot_frac=HOT_FRAC, hot_blocks=HOT_BLOCKS)
+    res = run_workload(cfg, shards=shards, adaptive=adaptive)
+    return {
+        "workload": "RN-R-hot", "clients": cfg.n * PROCS,
+        "shards": shards, "routing": "adaptive" if adaptive else "static",
+        "model": model, "seed": seed,
+        "read_bw": round(res.read_bandwidth),
+        "rpc_query": res.rpc_counts["query"],
+        "rpc_migrate": res.rpc_counts["migrate"],
+        "verified": res.verified_reads,
+    }
+
+
+def run(fast: bool = False, seed: int = 0) -> List[Dict]:
+    rows: List[Dict] = []
+    nodes = FAST_NODES if fast else NODES
+    for n in nodes:
+        for model in ("commit", "session"):
+            rows.append(_row(n, model, 1, False, seed))
+            rows.append(_row(n, model, SHARDS, False, seed))
+            rows.append(_row(n, model, SHARDS, True, seed))
+    return rows
+
+
+def _bw(rows: List[Dict], model: str, shards: int, routing: str,
+        clients: int) -> float:
+    return pick(rows, workload="RN-R-hot", model=model, shards=shards,
+                routing=routing, clients=clients)["read_bw"]
+
+
+def _max_clients(rows: List[Dict]) -> int:
+    return max(r["clients"] for r in rows)
+
+
+def _has_grid(rows: List[Dict]) -> bool:
+    return ({1, SHARDS} <= set(scales(rows, "shards", model="commit"))
+            and "adaptive" in scales(rows, "routing", shards=SHARDS))
+
+
+CLAIMS = [
+    Claim(
+        "static striping cannot absorb the hot region: 8 static shards "
+        "lift commit reads < 3x over 1 shard (uniform RN-R gets ~4x)",
+        lambda rows: (
+            _bw(rows, "commit", SHARDS, "static", _max_clients(rows))
+            < 3.0 * _bw(rows, "commit", 1, "static", _max_clients(rows))
+        ),
+        requires=_has_grid,
+    ),
+    Claim(
+        "adaptive routing beats static striping on hot-region commit "
+        "reads at 8 shards (>= 1.5x)",
+        lambda rows: all(
+            _bw(rows, "commit", SHARDS, "adaptive", c)
+            >= 1.5 * _bw(rows, "commit", SHARDS, "static", c)
+            for c in scales(rows, "clients", workload="RN-R-hot")
+        ),
+        requires=_has_grid,
+    ),
+    Claim(
+        "the adaptive re-layout is paid for: commit runs record migrate "
+        "RPCs; static runs record none",
+        lambda rows: all(
+            (r["rpc_migrate"] > 0) == (r["routing"] == "adaptive")
+            for r in rows if r["model"] == "commit" and r["shards"] > 1
+        ),
+        requires=lambda rows: any(r["routing"] == "adaptive"
+                                  for r in rows),
+    ),
+    Claim(
+        "session hot reads are routing-insensitive (adaptive within 25% "
+        "of static at 8 shards)",
+        lambda rows: all(
+            0.75 <= (_bw(rows, "session", SHARDS, "adaptive", c)
+                     / _bw(rows, "session", SHARDS, "static", c)) <= 1.33
+            for c in scales(rows, "clients", workload="RN-R-hot")
+        ),
+        requires=_has_grid,
+    ),
+]

@@ -2,9 +2,10 @@
 
 Runs Fig 3 (CN-W/SN-W writes), Fig 4 (CC-R/CS-R reads), Fig 5 (SCR
 checkpoint/restart), Fig 6 (distributed-DL random reads), Fig 7 (sharded
-metadata server / RPC batching sweep); prints tables, writes
-``artifacts/bench/*.csv``, evaluates every paper claim, then (if dry-run
-artifacts exist) prints the §Roofline table.
+metadata server / RPC batching sweep), Fig 8 (hot-region skewed reads vs
+the adaptive router); prints tables, writes ``artifacts/bench/*.csv``,
+evaluates every paper claim, then (if dry-run artifacts exist) prints the
+§Roofline table.
 
 Every benchmark run verifies all bytes it reads — these are correctness
 tests of the consistency layers as much as performance measurements.
@@ -12,11 +13,13 @@ tests of the consistency layers as much as performance measurements.
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig7]
                                             [--shards N] [--batch N]
                                             [--linger USEC] [--stripe BYTES]
-                                            [--adaptive]
+                                            [--adaptive] [--seed N]
 
 ``--shards``/``--batch``/``--linger``/``--stripe``/``--adaptive`` set
 the deployment topology for figs 3-6 (fig7 sweeps shard counts and the
-send-queue linger itself but honours ``--batch``).  Claims whose
+send-queue linger itself but honours ``--batch``; fig8 sweeps routing
+itself).  ``--seed`` re-seeds the skewed-offset generators of figures
+that take one (fig8), keeping their grids reproducible.  Claims whose
 ``requires`` predicate is unmet on the selected grid (e.g. under
 ``--fast``) are reported SKIP and do not affect the exit status.
 """
@@ -24,11 +27,12 @@ send-queue linger itself but honours ``--batch``).  Claims whose
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
 from benchmarks import (fig3_write, fig4_read, fig5_scr, fig6_dl,
-                        fig7_shard, roofline)
+                        fig7_shard, fig8_hot, roofline)
 from benchmarks.common import print_table, save_csv
 from repro.io import workloads
 
@@ -49,6 +53,10 @@ FIGS = {
              "(RN-R 8KB)",
              ("workload", "clients", "shards", "batch", "linger_us",
               "model", "read_bw", "rpc_query", "verified")),
+    "fig8": (fig8_hot, "Fig 8: hot-region skewed reads vs adaptive "
+             "routing (RN-R-hot 8KB)",
+             ("workload", "clients", "shards", "routing", "model",
+              "read_bw", "rpc_query", "rpc_migrate", "verified")),
 }
 
 
@@ -70,6 +78,8 @@ def main(argv=None) -> int:
                     help="metadata stripe width in bytes (default 64KiB)")
     ap.add_argument("--adaptive", action="store_true", default=None,
                     help="adaptive stripe widths + shard rebalancing")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for skewed-offset generators (fig8)")
     args = ap.parse_args(argv)
 
     wanted = [w for w in args.only.split(",") if w] or list(FIGS)
@@ -90,7 +100,10 @@ def main(argv=None) -> int:
     for key in wanted:
         mod, title, cols = FIGS[key]
         t0 = time.time()
-        rows = mod.run(fast=args.fast)
+        kwargs = {}
+        if "seed" in inspect.signature(mod.run).parameters:
+            kwargs["seed"] = args.seed
+        rows = mod.run(fast=args.fast, **kwargs)
         dt = time.time() - t0
         print_table(f"{title}   [{dt:.1f}s, {len(rows)} points]",
                     rows, cols)
@@ -110,7 +123,7 @@ def main(argv=None) -> int:
     nskip = sum(1 for *_a, ok in claim_summary if ok is None)
     nfail = sum(1 for *_a, ok in claim_summary if ok is False)
     print(f"  {npass} PASS / {nfail} FAIL / {nskip} SKIP "
-          f"(skipped = grid lacks the rows the claim needs)")
+          "(skipped = grid lacks the rows the claim needs)")
 
     if not args.no_roofline:
         rows = roofline.load_rows()

@@ -10,7 +10,7 @@ whatever the buffers hold.
 """
 
 from repro.core.checker import TracedRun
-from repro.core.consistency import CommitFS, SessionFS, make_fs
+from repro.core.consistency import CommitFS, SessionFS
 from repro.core.model import COMMIT_MODEL, MODELS, SESSION_MODEL
 
 F = "/litmus"

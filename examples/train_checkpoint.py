@@ -24,7 +24,6 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.costmodel import CostModel
 from repro.data.dlio import PreloadedStore
 from repro.data.pipeline import TokenPipeline, make_token_samples
-from repro.launch.mesh import opt_for
 from repro.models.config import ModelConfig
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import make_train_step, train_state_init
@@ -122,7 +121,7 @@ def main() -> None:
     mgr.save(args.steps, state)
     mgr.flush(args.steps)     # level-2: drain to the underlying PFS
     print(f"\nfinal loss {float(metrics['loss']):.4f} after {i} steps "
-          f"(1 failure, elastic restart)")
+          "(1 failure, elastic restart)")
 
     # ---- I/O accounting through the DES --------------------------------
     phases = CostModel().replay(store.fs.ledger)

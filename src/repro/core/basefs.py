@@ -23,8 +23,8 @@ from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.intervals import BufferIntervalMap, Interval, OwnerIntervalMap
-from repro.core.routing import (DEFAULT_STRIPE, StaticRouter, make_router,
-                                shard_of)
+from repro.core.routing import DEFAULT_STRIPE, StaticRouter, make_router
+from repro.core.routing import shard_of  # noqa: F401  (re-export, see below)
 
 
 class BFSError(Exception):
@@ -58,7 +58,24 @@ class Event:
     shard: int = 0                   # metadata-server shard handling an RPC
     rpc_calls: int = 1               # client calls coalesced into this RPC
     flush: str = ""                  # send-queue close reason ("" = unqueued)
-    linger: float = 0.0              # residual queue-hold delay charged (s)
+    linger: float = 0.0              # send-queue linger window (s; see DES)
+    # Cross-client dependency edges: global seqs of producer events whose
+    # server-side effect this RPC's service must observe (e.g. a query
+    # blocks on the writer's dep-flushed attach batch at the shard
+    # master).  Empty for unqueued traffic — the paper's default
+    # deployment carries no edges and replays exactly as before.
+    deps: Tuple[int, ...] = ()
+    # Virtual-clock anchors for the time-driven DES batcher: the seq of
+    # the SAME client's most recent ledger event when the send queue
+    # opened (first member enqueued) and when the LAST member was
+    # enqueued.  -1 = no prior event (the queue opened at phase start).
+    opened_after: int = -1
+    last_after: int = -1
+    # For a flush forced by ANOTHER client (a consumer's dep-flush): the
+    # forcing client's most recent ledger-event seq — the virtual-clock
+    # floor of the forced close, since the producer's own chain position
+    # says nothing about when the consumer asked.  -1 = self-forced.
+    forced_after: int = -1
 
 
 class EventLedger:
@@ -79,17 +96,25 @@ class EventLedger:
         self.client_node: Dict[int, int] = {}  # client id -> node id
         self.on_barrier: List[Callable[[], None]] = []
         self.pre_record: List[Callable[[EventKind, int], None]] = []
+        # Per-client seq of the most recently appended event; the send
+        # queues use it to stamp virtual-clock anchors on flushed batches.
+        self.last_seq: Dict[int, int] = {}
 
     def record(self, kind: EventKind, client: int, nbytes: int = 0,
                rpc_type: str = "", peer: int = -1, rpc_ranges: int = 1,
                shard: int = 0, rpc_calls: int = 1, flush: str = "",
-               linger: float = 0.0) -> None:
+               linger: float = 0.0, deps: Tuple[int, ...] = (),
+               opened_after: int = -1, last_after: int = -1,
+               forced_after: int = -1) -> None:
         for hook in self.pre_record:
             hook(kind, client)
+        seq = next(self._seq)
         self.events.append(
-            Event(kind, client, nbytes, rpc_type, peer, next(self._seq),
-                  rpc_ranges, shard, rpc_calls, flush, linger)
+            Event(kind, client, nbytes, rpc_type, peer, seq,
+                  rpc_ranges, shard, rpc_calls, flush, linger, deps,
+                  opened_after, last_after, forced_after)
         )
+        self.last_seq[client] = seq
 
     def mark_phase(self, name: str) -> None:
         """Global barrier + phase boundary for the cost model."""
@@ -173,10 +198,15 @@ FLUSH_BARRIER = "barrier"  # global phase barrier
 FLUSH_LINGER = "linger"    # zero-linger queue: intervening client activity
 FLUSH_CLOSE = "close"      # deployment drain (end of measured run)
 
-#: Reasons where the batch sat in the queue waiting for more members when
-#: it was forced out — the DES charges the configured linger hold for
-#: these (a conservative upper bound on the residual timer).
-LINGER_CHARGED = (FLUSH_BARRIER, FLUSH_CLOSE, FLUSH_LINGER)
+#: Close reasons whose real force time is EXTERNAL to the issuing
+#: client's control flow AND carries no per-event clock anchor: the DES
+#: prices their departure on the queue's own timer (``t_open + linger``)
+#: — a barrier/drain is global, so the producer's chain position at the
+#: flush's ledger slot says nothing about when the close really
+#: happened.  (Cross-client ``dep`` flushes are external too, but they
+#: carry the forcing client's clock in ``Event.forced_after``; every
+#: other reason is forced at the producer's own chain position.)
+TIMER_FORCED = (FLUSH_BARRIER, FLUSH_CLOSE)
 
 #: Default coalescing window when batching is enabled (seconds).
 DEFAULT_LINGER = 50e-6
@@ -190,6 +220,12 @@ class _SendQueue:
     nbytes: int = 0
     nranges: int = 0
     calls: int = 0
+    # Virtual-clock anchors: same-client ledger seqs at queue open / last
+    # member enqueue (-1 = client had no prior events).
+    opened_after: int = -1
+    last_after: int = -1
+    # Producer edges accumulated by consumer RPCs coalesced in here.
+    deps: List[int] = field(default_factory=list)
 
 
 class RPCBatcher:
@@ -218,11 +254,17 @@ class RPCBatcher:
     * **close** — :meth:`BaseFS.drain` at the end of a measured run.
 
     Because the flush event is appended at flush time, a coalesced member
-    can never be priced before data events it logically follows — the DES
-    prices the whole batch at its flush position, plus a per-flush send
-    penalty and (for barrier/close/linger flushes) the residual queue-hold
-    ``linger``.  Metadata *content* is still applied eagerly at call time
-    (correctness is exact); only the RPC traffic's timing is modeled.
+    can never appear in the ledger before data events it logically
+    follows.  The flush *timestamp*, however, is derived by the DES from
+    the queue's virtual clock: each batch event carries anchors for when
+    the queue opened and when its last member was enqueued, and the DES
+    sends it at ``max(last_member, min(forced_close, open + linger))`` —
+    so a linger expiry fires mid-phase (the RPC overlaps subsequent
+    client work) instead of being priced at the next fence or barrier.
+    Consumer RPCs additionally carry ``deps`` edges on the producer
+    flushes they observe (see :meth:`dep_flush_attaches`).  Metadata
+    *content* is still applied eagerly at call time (correctness is
+    exact); only the RPC traffic's timing is modeled.
     """
 
     BATCHABLE = ("attach", "query")
@@ -241,18 +283,34 @@ class RPCBatcher:
         return self.max_ranges > 1
 
     # ---- close triggers ----------------------------------------------
-    def flush(self, client: int, reason: str) -> None:
-        """Send the client's open batch: append its RPC event now."""
+    def flush(self, client: int, reason: str,
+              forced_by: Optional[int] = None) -> Optional[int]:
+        """Send the client's open batch: append its RPC event now.
+
+        Returns the flushed event's global seq (``None`` if the queue was
+        empty) so consumers can record producer/consumer edges on it.
+        The batch event carries the queue's virtual-clock anchors
+        (``opened_after``/``last_after``), its linger window, and — for a
+        close forced by ANOTHER client (``forced_by``) — that client's
+        clock anchor; from these the DES derives the honest flush
+        timestamp, which can land mid-phase, strictly before (or, for
+        externally-forced closes, after) this ledger slot.
+        """
         q = self._open.pop(client, None)
         if q is None:
-            return
+            return None
+        forced_after = -1
+        if forced_by is not None and forced_by != client:
+            forced_after = self.ledger.last_seq.get(forced_by, -1)
         rpc_type, _path, shard = q.key
         self.ledger.record(
             EventKind.RPC, client, q.nbytes, rpc_type=rpc_type,
             rpc_ranges=q.nranges, shard=shard, rpc_calls=q.calls,
-            flush=reason,
-            linger=self.linger if reason in LINGER_CHARGED else 0.0,
+            flush=reason, linger=self.linger, deps=tuple(q.deps),
+            opened_after=q.opened_after, last_after=q.last_after,
+            forced_after=forced_after,
         )
+        return self.ledger.events[-1].seq
 
     def flush_all(self, reason: str) -> None:
         for client in list(self._open):
@@ -262,18 +320,33 @@ class RPCBatcher:
         """Close the client's open batch (consistency-layer sync point)."""
         self.flush(client, FLUSH_FENCE)
 
-    def dep_flush_query(self, client: int) -> None:
+    def dep_flush_query(self, client: int) -> Optional[int]:
         """A read is about to consume the client's pending query answer."""
         q = self._open.get(client)
         if q is not None and q.key[0] == "query":
-            self.flush(client, FLUSH_DEP)
+            return self.flush(client, FLUSH_DEP)
+        return None
 
-    def dep_flush_attaches(self, path: str) -> None:
+    def dep_flush_attaches(self, path: str,
+                           by_client: Optional[int] = None) -> List[int]:
         """A query/stat answer on ``path`` reflects every attach applied so
-        far — pending attach batches on the file must be sent first."""
+        far — pending attach batches on the file must be sent first.
+
+        ``by_client`` is the querying consumer forcing the flush: it is
+        stamped as the producers' ``forced_after`` clock anchor (a
+        producer's batch cannot depart before the consumer asked, unless
+        its own timer fired first).  Returns the seqs of the flushed
+        attach events: the consumer stamps them as ``deps`` so the DES
+        blocks its service on the producers' in-flight flushes at the
+        shard masters, not merely on ledger order.
+        """
+        seqs: List[int] = []
         for client, q in list(self._open.items()):
             if q.key[0] == "attach" and q.key[1] == path:
-                self.flush(client, FLUSH_DEP)
+                seq = self.flush(client, FLUSH_DEP, forced_by=by_client)
+                if seq is not None:
+                    seqs.append(seq)
+        return seqs
 
     def _on_client_activity(self, kind: EventKind, client: int) -> None:
         # Zero-linger send queues never hold a batch while the client does
@@ -285,14 +358,17 @@ class RPCBatcher:
 
     # ---- enqueue ------------------------------------------------------
     def submit(self, rpc_type: str, client: int, path: str, shard: int,
-               nranges: int, nbytes: int) -> None:
+               nranges: int, nbytes: int,
+               deps: Tuple[int, ...] = ()) -> None:
         """Enqueue one RPC, coalescing into the client's send queue if legal;
-        non-batchable types flush the queue and record immediately."""
+        non-batchable types flush the queue and record immediately.
+        ``deps`` are producer-event seqs this RPC's service depends on
+        (carried on the recorded event, or accumulated into the queue)."""
         if not (self.enabled and rpc_type in self.BATCHABLE):
             self.flush(client, FLUSH_SWITCH)
             self.ledger.record(EventKind.RPC, client, nbytes,
                                rpc_type=rpc_type, rpc_ranges=nranges,
-                               shard=shard)
+                               shard=shard, deps=deps)
             return
         key = (rpc_type, path, shard)
         q = self._open.get(client)
@@ -303,10 +379,16 @@ class RPCBatcher:
             self.flush(client, FLUSH_SIZE)
             q = None
         if q is None:
-            q = self._open[client] = _SendQueue(key)
+            q = self._open[client] = _SendQueue(
+                key, opened_after=self.ledger.last_seq.get(client, -1)
+            )
         q.nbytes += nbytes
         q.nranges += nranges
         q.calls += 1
+        q.last_after = self.ledger.last_seq.get(client, -1)
+        for d in deps:
+            if d not in q.deps:
+                q.deps.append(d)
         if q.nranges >= self.max_ranges:
             self.flush(client, FLUSH_SIZE)
 
@@ -369,14 +451,17 @@ class GlobalServer:
         """Partition byte runs into per-shard stripe-aligned pieces."""
         return self.router.split_runs(path, runs)
 
-    def _observe(self, path: str, runs: List[Tuple[int, int]],
+    def _observe(self, client: int, path: str, runs: List[Tuple[int, int]],
                  by_shard: Dict[int, List[Tuple[int, int]]]) -> None:
-        """Feed the router's load stats and apply any re-layout it decides."""
+        """Feed the router's load stats and apply any re-layout it decides.
+
+        ``client`` is the accessor whose RPC tipped the router — the
+        migration's virtual-clock anchor."""
         self.router.observe(path, runs, by_shard)
         for dirty in sorted(self.router.take_dirty()):
-            self._migrate(dirty)
+            self._migrate(dirty, client)
 
-    def _migrate(self, path: str) -> None:
+    def _migrate(self, path: str, client: int) -> None:
         """Move ``path``'s interval trees to the router's new layout.
 
         The rebalancing traffic is real: one ``migrate`` RPC per receiving
@@ -398,17 +483,30 @@ class GlobalServer:
                 for start, end in pieces:
                     tree.attach(start, end, iv.value)
                 moved[k] = moved.get(k, 0) + len(pieces)
+        # Anchor the migration on the triggering client: the DES schedules
+        # the migrate RPCs on the same virtual clock, no earlier than that
+        # client's latest recorded event (not at phase start).  When the
+        # triggering RPC itself is still coalescing in the client's send
+        # queue, the anchor is the client's preceding event — a lower
+        # bound on the access's issue time (the batch must not be force-
+        # flushed: clients do not observe server-side re-layouts).
+        anchor = self.ledger.last_seq.get(client, -1)
+        deps = (anchor,) if anchor >= 0 else ()
         for k in sorted(moved):
             self.ledger.record(EventKind.RPC, MIGRATOR_CLIENT,
                                24 * moved[k], rpc_type="migrate",
-                               rpc_ranges=moved[k], shard=k)
+                               rpc_ranges=moved[k], shard=k, deps=deps)
 
     def submit(self, rpc_type: str, client: int, nbytes: int,
-               shard: int = 0, nranges: int = 1, path: str = "") -> None:
+               shard: int = 0, nranges: int = 1, path: str = "",
+               deps: Tuple[int, ...] = ()) -> None:
         """Enqueue the RPC through the send-queue batcher; the DES replays
         the shard's master dispatch + round-robin worker queues from the
-        ledger at the batch's flush position."""
-        self.batcher.submit(rpc_type, client, path, shard, nranges, nbytes)
+        ledger at the batch's flush time on the virtual clock.  ``deps``
+        carry producer edges (e.g. a consumer query's dependency on the
+        writers' just-flushed attach batches)."""
+        self.batcher.submit(rpc_type, client, path, shard, nranges, nbytes,
+                            deps=deps)
 
     # ---- RPC handlers -------------------------------------------------
     def attach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> None:
@@ -421,7 +519,7 @@ class GlobalServer:
             tree = self.shards[k].tree(path)
             for start, end in pieces:
                 tree.attach(start, end, client)
-        self._observe(path, runs, by_shard)
+        self._observe(client, path, runs, by_shard)
 
     def detach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> bool:
         any_removed = False
@@ -435,38 +533,42 @@ class GlobalServer:
 
     def query(self, client: int, path: str, start: int, end: int) -> List[Interval]:
         # The answer reflects every attach applied so far — pending attach
-        # batches on this file must be sent (flushed) before the query.
-        self.batcher.dep_flush_attaches(path)
+        # batches on this file must be sent (flushed) before the query,
+        # and the query carries consumer edges on those flushes so the
+        # DES serializes it behind them at the shard masters.
+        dep_seqs = tuple(self.batcher.dep_flush_attaches(path, client))
         found: List[Interval] = []
         by_shard = self._split_runs(path, [(start, end)])
         for k, pieces in by_shard.items():
             self.submit("query", client, 24 * len(pieces), shard=k,
-                        nranges=len(pieces), path=path)
+                        nranges=len(pieces), path=path, deps=dep_seqs)
             tree = self.shards[k].peek(path)
             for s, e in pieces:
                 found.extend(tree.owners(s, e))
-        self._observe(path, [(start, end)], by_shard)
+        self._observe(client, path, [(start, end)], by_shard)
         # Stitch stripe-split results back into maximal owner runs so the
         # read path issues the same transfers as the unsharded server.
         return _coalesce(found)
 
     def query_file(self, client: int, path: str) -> List[Interval]:
-        self.batcher.dep_flush_attaches(path)
+        dep_seqs = tuple(self.batcher.dep_flush_attaches(path, client))
         # Whole-file queries broadcast: every shard may own stripes.
         found: List[Interval] = []
         for k, sh in enumerate(self.shards):
-            self.submit("query", client, 24, shard=k, nranges=1, path=path)
+            self.submit("query", client, 24, shard=k, nranges=1, path=path,
+                        deps=dep_seqs)
             tree = sh.peek(path)
             if len(tree):
                 found.extend(tree.owners(0, tree.max_end))
         return _coalesce(found)
 
     def stat_eof(self, client: int, path: str, pfs_size: int) -> int:
-        self.batcher.dep_flush_attaches(path)
+        dep_seqs = tuple(self.batcher.dep_flush_attaches(path, client))
         # The file's home shard serves stat (size attr is tracked there in
         # a real system); content-wise we take the max over all shards.
         home = self.router.shard_for(path, 0)
-        self.submit("stat", client, 16, shard=home, nranges=1, path=path)
+        self.submit("stat", client, 16, shard=home, nranges=1, path=path,
+                    deps=dep_seqs)
         eof = max(sh.peek(path).max_end for sh in self.shards)
         return max(eof, pfs_size)
 

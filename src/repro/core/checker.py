@@ -22,13 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.basefs import SEEK_SET
 from repro.core.consistency import (
-    CommitFS,
-    FileHandle,
-    MPIIOFS,
-    PosixFS,
-    SessionFS,
-    _LayeredFS,
-)
+    CommitFS, FileHandle, MPIIOFS, SessionFS, _LayeredFS)
 from repro.core.model import Execution, ModelSpec, Op, OpType
 
 # Layer API call -> formal sync-op kind (paper Table 4 naming).

@@ -20,10 +20,10 @@ owners are split along the owner intervals returned by the query.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
-from repro.core.basefs import SEEK_SET, BaseFS, BFSClient, BFSError
+from repro.core.basefs import SEEK_SET, BaseFS, BFSClient
 from repro.core.intervals import Interval, OwnerIntervalMap
 
 
@@ -57,14 +57,23 @@ class _LayeredFS:
     #: Layer operations that fence the RPC send queue (documentation +
     #: introspection; the methods below call ``fs.rpc_fence`` themselves).
     sync_points: Tuple[str, ...] = ("close",)
+    #: Layer operations that CONSUME other clients' metadata: their
+    #: queries dep-flush every in-flight attach batch on the file and
+    #: carry ``Event.deps`` edges on those flushes, so the DES blocks
+    #: them at the shard master until the producers' flushes are
+    #: serviced (the cross-client visibility edge of §V — where the
+    #: session-vs-commit gap is priced).  The edges are emitted by
+    #: ``GlobalServer.query``/``query_file``/``stat_eof``; this
+    #: attribute documents which layer operations reach them.
+    consumer_edges: Tuple[str, ...] = ("stat_size",)
 
     def __init__(self, fs: Optional[BaseFS] = None) -> None:
         self.fs = fs or BaseFS()
 
     # ---- lifecycle ----
-    def open(self, client_id: int, path: str, node: Optional[int] = None
-             ) -> FileHandle:
-        c = self.fs.client(client_id, node)
+    def open(self, client_id: int, path: str, node: Optional[int] = None,
+             tier: str = "ssd") -> FileHandle:
+        c = self.fs.client(client_id, node, tier=tier)
         h = self.fs.bfs_open(c, path)
         return FileHandle(c, h, path)
 
@@ -148,6 +157,7 @@ class PosixFS(_LayeredFS):
 
     name = "posix"
     sync_points = ("close",)
+    consumer_edges = ("read", "stat_size")  # query per read
 
     def write(self, fh: FileHandle, data: bytes) -> int:
         fs, c, h = self.fs, fh.client, fh.bfs_handle
@@ -168,6 +178,7 @@ class CommitFS(_LayeredFS):
 
     name = "commit"
     sync_points = ("commit", "close")
+    consumer_edges = ("read", "stat_size")  # query per read
 
     def write(self, fh: FileHandle, data: bytes) -> int:
         return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
@@ -199,6 +210,10 @@ class SessionFS(_LayeredFS):
 
     name = "session"
     sync_points = ("session_close", "close")
+    # One consumer edge per session: reads resolve owners from the
+    # session_open snapshot, so only the opening query blocks on
+    # in-flight writer flushes.
+    consumer_edges = ("session_open", "stat_size")
 
     def session_open(self, fh: FileHandle) -> None:
         owners = self.fs.bfs_query_file(fh.client, fh.bfs_handle)
@@ -240,10 +255,12 @@ class MPIIOFS(_LayeredFS):
 
     name = "mpiio"
     sync_points = ("file_sync", "file_close", "close")
+    consumer_edges = ("file_open", "file_sync", "stat_size")
 
     def file_open(self, client_id: int, path: str,
-                  node: Optional[int] = None) -> FileHandle:
-        fh = self.open(client_id, path, node)
+                  node: Optional[int] = None,
+                  tier: str = "ssd") -> FileHandle:
+        fh = self.open(client_id, path, node, tier=tier)
         self._refresh(fh)
         return fh
 

@@ -22,8 +22,8 @@ was measured from the real (in-process) BaseFS execution.  This is the
 paper's own isolation argument one level up: the consistency model changes
 RPC placement, the ledger records the difference, the DES prices it.
 
-Issue-time vs flush-time costs
-------------------------------
+Issue-time vs flush-time costs (time-driven send queues)
+--------------------------------------------------------
 Data events (SSD/NET/MEM/PFS) are priced at their *issue* point: the
 event executes where it sits in the issuing client's chain, reserving the
 device FIFO from the client's current clock.  RPC events come in two
@@ -32,31 +32,56 @@ flavours:
 * **unqueued** (``Event.flush == ""``, i.e. ``batch=0`` or a
   non-batchable type) — also issue-time: the round trip starts at the
   client's clock, exactly the pre-batching model;
-* **flushed batches** (``Event.flush`` names a close reason) — priced at
-  the batch's *flush* position in the chain, which by construction is at
-  or after every coalesced member's issue point (the ledger appends the
-  RPC when the send queue closes, never back-dated to the first member).
-  A flushed batch additionally pays ``batch_flush_lat`` (client-side
-  marshalling of the multi-range message, chain-only) and, when the
-  close reason implies the batch sat waiting for more members
-  (barrier/close/linger flushes), the residual queue-hold delay stamped
-  in ``Event.linger``.  Server-side per-range work (``task_per_range``)
-  is charged at the worker regardless of batching.
+* **flushed batches** (``Event.flush`` names a close reason) — priced on
+  the send queue's own virtual clock.  Each batch event carries anchors
+  (``Event.opened_after`` / ``Event.last_after``: same-client ledger
+  seqs) from which the DES reconstructs when the queue opened and when
+  its last member was enqueued; with the queue's linger window ``W``
+  (``Event.linger``) the honest flush timestamp is
 
-Because the client chain is sequential, any operation recorded after a
-flushed RPC — e.g. a read that consumed a batched query's answer —
-blocks on the full round trip, which is exactly the visibility-timing
-honesty the paper's formal definitions require (a batched query can no
-longer answer "for free" before it was sent).
+      send = max(t_last_member, min(t_forced, t_open + W))
+
+  where ``t_forced`` is the moment the close was really forced: the
+  issuing client's chain position for self-forced closes (size cap,
+  fence, type/file switch, zero-linger activity), the FORCING client's
+  clock (``Event.forced_after``) for a cross-client dep flush — the
+  producer's chain position says nothing about when the consumer asked
+  — and, for barrier/drain closes whose true force time (global phase
+  end) is unknowable mid-replay, the timer expiry itself (conservative:
+  the queue is never modeled as departing earlier than it would have
+  held the batch).  A linger expiry therefore fires *mid-phase*: if the
+  timer ran out while the client was busy with data events, the RPC
+  departs then and its round trip overlaps the remaining client work —
+  the chain only blocks if it reaches the flush slot before the
+  response is back (``clock = max(chain_arrival, t_response)``).  The
+  batch also pays ``batch_flush_lat`` (client-side marshalling,
+  chain-only); server-side per-range work (``task_per_range``) is
+  charged at the worker regardless of batching.  At ``W == 0`` every
+  case degenerates to ``send == chain_arrival`` — clock and ledger
+  order agree exactly (property-tested).
+
+Cross-client dependency edges
+-----------------------------
+``Event.deps`` names producer events whose *server-side effect* this
+RPC's service must observe: a consumer query that dep-flushed writers'
+attach batches cannot be serviced at the shard master before those
+flushes have been serviced there (their content is what the answer
+reflects).  The replay honours these edges with a blocked-waiter table —
+a client whose next event has an unserviced dependency parks until the
+producer's RPC completes at its shard, then resumes with its service
+start clamped to the producer's completion.  Edges always point to
+strictly earlier ledger seqs, so the wait graph is acyclic.  The default
+deployment (``num_shards=1, batch=0``) emits no edges and replays
+event-for-event as the pre-batching model.
 """
 
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-from repro.core.basefs import Event, EventKind, EventLedger
+from repro.core.basefs import TIMER_FORCED, Event, EventKind, EventLedger
 
 
 @dataclass(frozen=True)
@@ -145,16 +170,56 @@ class _Resource:
         return self.avail
 
 
+@dataclass(frozen=True)
+class FlushTrace:
+    """Virtual-clock timing of one flushed send-queue batch (diagnostics).
+
+    ``send < chain_arrival`` is the mid-phase close: the linger timer (or
+    the last member) released the batch strictly before the client chain
+    reached the batch's ledger slot, so the round trip overlapped client
+    work that the ledger orders after it.
+    """
+
+    event: Event
+    phase: str
+    opened: float         # queue opened (first member enqueued)
+    last_member: float    # last member enqueued
+    chain_arrival: float  # client chain reached the flush ledger slot
+    send: float           # honest departure on the virtual clock
+    dep_wait: float       # extra service delay from cross-client edges (s)
+    response: float       # round trip completed back at the client
+
+
 class CostModel:
     def __init__(self, hw: Optional[HardwareConstants] = None) -> None:
         self.hw = hw or HardwareConstants()
 
     # ------------------------------------------------------------------
     def replay(self, ledger: EventLedger,
-               trace: Optional[List[Tuple[Event, float, float]]] = None
+               trace: Optional[List[Tuple[Event, float, float]]] = None,
+               flush_trace: Optional[List[FlushTrace]] = None,
+               honor_edges: bool = True,
+               record_order: Optional[List[int]] = None,
+               exec_order: Optional[List[int]] = None,
                ) -> List[PhaseResult]:
         """Price the ledger; optionally append per-event ``(event, start,
-        finish)`` DES times to ``trace`` (used by the flush-timing tests)."""
+        finish)`` DES times to ``trace`` (for a flushed batch, ``start``
+        is its virtual-clock departure) and per-batch :class:`FlushTrace`
+        records to ``flush_trace``.
+
+        ``honor_edges=False`` ignores ``Event.deps`` entirely — the
+        optimistic pre-edge model, where a consumer can be serviced
+        before its producer's in-flight flush.  Because ignoring edges
+        also *reorders* the greedy schedule, its makespan is not a lower
+        bound of the honest one (FIFO scheduling anomalies cut both
+        ways).  For a sound "what did the edges cost" comparison, pass
+        ``record_order`` (a list the replay fills with the executed seq
+        sequence) and re-replay with ``exec_order`` set to it plus
+        ``honor_edges=False``: the forced-order counterfactual reserves
+        every resource in the SAME order and differs only by the
+        dependency waits, so each of its timestamps — and the makespan —
+        is pointwise <= the honest replay's (max-plus monotonicity; the
+        edge-monotonicity property tests rely on this)."""
         hw = self.hw
         node_of = dict(ledger.client_node)
         # Split the ledger at markers into phases.
@@ -190,6 +255,25 @@ class CostModel:
                 table[key] = _Resource()
             return table[key]
 
+        # Virtual-clock bookkeeping.  ``chain_done`` records the chain
+        # finish time of events referenced as send-queue anchors
+        # (opened_after/last_after); ``effect_done`` records the
+        # server-side completion of events referenced by dependency
+        # edges.  Both persist across phases (anchors/edges may point
+        # behind a barrier, where they are trivially satisfied).
+        referenced: Set[int] = set()
+        for e in ledger.events:
+            if e.opened_after >= 0:
+                referenced.add(e.opened_after)
+            if e.last_after >= 0:
+                referenced.add(e.last_after)
+            if e.forced_after >= 0:
+                referenced.add(e.forced_after)
+            referenced.update(e.deps)
+        chain_done: Dict[int, float] = {}
+        effect_done: Dict[int, float] = {}
+        op_ptr = 0  # consumed prefix of ``exec_order`` (forced replays)
+
         for name, events in phases:
             # Per-client chains, concurrent within the phase.
             chains: Dict[int, List[Event]] = {}
@@ -197,17 +281,12 @@ class CostModel:
                 chains.setdefault(e.client, []).append(e)
             clock: Dict[int, float] = {c: now for c in chains}
             idx: Dict[int, int] = {c: 0 for c in chains}
-            heap: List[Tuple[float, int]] = [(now, c) for c in chains]
-            heapq.heapify(heap)
             bytes_by_kind: Dict[EventKind, int] = {}
             rpc_count = 0
 
-            while heap:
-                t, c = heapq.heappop(heap)
-                if idx[c] >= len(chains[c]):
-                    continue
-                e = chains[c][idx[c]]
-                idx[c] += 1
+            def execute(e: Event) -> None:
+                nonlocal rpc_count
+                c = e.client
                 t = clock[c]
                 start = t
                 node = node_of.get(c, c)
@@ -248,12 +327,44 @@ class CostModel:
                     t = pfs.reserve(t, hw.pfs_op + nb / hw.pfs_bw) + hw.pfs_lat
                 elif k is EventKind.RPC:
                     rpc_count += 1
-                    send = t
                     if e.flush:
-                        # Flush-time costs for a send-queue batch: client
-                        # marshal penalty + residual queue-hold (linger).
-                        send += hw.batch_flush_lat + e.linger
+                        # Time-driven send queue: reconstruct the queue's
+                        # open / last-member times from the same-client
+                        # anchors and send at the linger expiry if it
+                        # fired before the forced close.  The forced-close
+                        # moment depends on WHO forced it: the issuing
+                        # client's own chain position for self-forced
+                        # closes (size/fence/switch/zero-linger), the
+                        # forcing client's clock for a cross-client dep
+                        # flush, and — for barrier/drain closes, whose
+                        # real force time (global phase end) is not
+                        # knowable mid-replay — the timer alone (a
+                        # conservative stand-in: never earlier than the
+                        # queue would really have held the batch).
+                        t_open = max(now, chain_done.get(e.opened_after,
+                                                         now))
+                        t_last = max(t_open, chain_done.get(e.last_after,
+                                                            now))
+                        if e.flush in TIMER_FORCED:
+                            t_forced = t_open + e.linger
+                        elif e.forced_after >= 0:
+                            t_forced = chain_done.get(e.forced_after, now)
+                        else:
+                            t_forced = t
+                        send = max(t_last, min(t_forced,
+                                               t_open + e.linger))
+                        send += hw.batch_flush_lat
+                    else:
+                        send = t
                     arrive = send + hw.rpc_net_lat
+                    dep_wait = 0.0
+                    if honor_edges and e.deps:
+                        # Producer edges: service cannot start before the
+                        # producers' RPCs completed at their shards.
+                        ready = max(effect_done.get(d, now)
+                                    for d in e.deps)
+                        dep_wait = max(0.0, ready - arrive)
+                        arrive = max(arrive, ready)
                     dispatched = res(shard_master, e.shard).reserve(
                         arrive, hw.server_occupancy
                     )
@@ -272,13 +383,83 @@ class CostModel:
                         hw.task_service + nranges * hw.task_per_range,
                     )
                     shard_rr[e.shard] = (rr + 1) % len(workers)
-                    t = done + hw.rpc_net_lat  # response back to client
+                    effect = done
+                    resp = done + hw.rpc_net_lat  # response to client
+                    if e.flush:
+                        # The chain only blocks if it reaches the flush
+                        # slot before the response is back: an early
+                        # (timer-fired) flush overlaps client work.
+                        start = send - hw.batch_flush_lat
+                        if flush_trace is not None:
+                            flush_trace.append(FlushTrace(
+                                event=e, phase=name, opened=t_open,
+                                last_member=t_last, chain_arrival=t,
+                                send=start, dep_wait=dep_wait,
+                                response=resp,
+                            ))
+                        t = max(t, resp)
+                    else:
+                        t = resp
+                    if e.seq in referenced:
+                        effect_done[e.seq] = effect
                 bytes_by_kind[k] = bytes_by_kind.get(k, 0) + nb
+                if e.seq in referenced:
+                    chain_done[e.seq] = t
+                    if e.kind is not EventKind.RPC:
+                        effect_done[e.seq] = t
                 if trace is not None:
                     trace.append((e, start, t))
+                if record_order is not None:
+                    record_order.append(e.seq)
                 clock[c] = t
-                if idx[c] < len(chains[c]):
-                    heapq.heappush(heap, (t, c))
+
+            if exec_order is None:
+                # Event-driven schedule: the client with the smallest
+                # clock executes next.  Cross-client edges: seqs
+                # scheduled in this phase but not yet executed park
+                # their consumers in a waiter table.  Edges always point
+                # to strictly smaller seqs and chains execute in seq
+                # order, so the wait graph is acyclic (no deadlock).
+                heap: List[Tuple[float, int]] = [(now, c) for c in chains]
+                heapq.heapify(heap)
+                pending: Set[int] = {e.seq for e in events}
+                waiters: Dict[int, List[int]] = {}
+                while heap:
+                    _t, c = heapq.heappop(heap)
+                    if idx[c] >= len(chains[c]):
+                        continue
+                    e = chains[c][idx[c]]
+                    if honor_edges and (e.deps or e.forced_after >= 0):
+                        anchors = (e.forced_after, *e.deps)
+                        blocked = next(
+                            (d for d in anchors if d >= 0 and d in pending),
+                            None,
+                        )
+                        if blocked is not None:
+                            waiters.setdefault(blocked, []).append(c)
+                            continue
+                    idx[c] += 1
+                    execute(e)
+                    pending.discard(e.seq)
+                    released = waiters.pop(e.seq, None)
+                    if released:
+                        for w in released:
+                            heapq.heappush(heap, (clock[w], w))
+                    if idx[c] < len(chains[c]):
+                        heapq.heappush(heap, (clock[c], c))
+            else:
+                # Forced-order replay (counterfactual pricing): execute
+                # this phase's events in the recorded sequence, so every
+                # resource is reserved in the same order as the run that
+                # produced it and timing differences come only from the
+                # toggled cost terms (e.g. ``honor_edges=False``).
+                by_seq = {e.seq: e for e in events}
+                taken = 0
+                while taken < len(events) and op_ptr < len(exec_order):
+                    e = by_seq[exec_order[op_ptr]]
+                    op_ptr += 1
+                    execute(e)
+                    taken += 1
 
             end = max(clock.values(), default=now)
             results.append(

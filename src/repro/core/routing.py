@@ -21,10 +21,12 @@ Both adaptations change the *layout*, so the owning
 :class:`~repro.core.basefs.GlobalServer` must migrate the affected
 files' interval trees between shard trees when the router reports them
 dirty (``take_dirty``); the server records the migration as ``migrate``
-RPCs so the DES prices the rebalancing traffic instead of pretending it
-is free.  Routing stays deterministic: given the same observation
-sequence, the same layout decisions are made (no wall-clock, no
-``hash()`` randomisation).
+RPCs, dep-anchored (``Event.deps``) on the access that triggered the
+re-layout, so the DES both prices the rebalancing traffic and schedules
+it on the simulation's virtual clock — a migration cannot execute at
+phase start when its trigger happened mid-phase.  Routing stays
+deterministic: given the same observation sequence, the same layout
+decisions are made (no wall-clock, no ``hash()`` randomisation).
 """
 
 from __future__ import annotations

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import random as _random
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 

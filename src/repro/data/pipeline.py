@@ -8,7 +8,7 @@ batches for smoke tests and the dry-run input_specs.
 
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,10 @@ marker).  Patterns:
 * ``strided`` — access ``j`` of rank ``i`` goes to offset ``(j*R + i) * s``.
 * ``random``  — a seeded permutation of all written blocks is dealt to the
   readers (the DL ingestion pattern, §6.3).
+* ``hot``     — skewed-offset reads: each access hits a small hot region
+  at the head of the file with probability ``hot_frac``, else a uniform
+  written block (the metadata-hotspot pattern fig8 uses to exercise the
+  adaptive router; seeded, reproducible via ``benchmarks.run --seed``).
 
 Each workload runs on a consistency layer from
 :mod:`repro.core.consistency`; per Table 6 the ONLY difference between the
@@ -20,7 +24,7 @@ from __future__ import annotations
 
 import random as _random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 # TOPOLOGY/set_topology are re-exported for the benchmark drivers.
 from repro.core.basefs import (BaseFS, EventKind,  # noqa: F401
@@ -54,7 +58,11 @@ class WorkloadConfig:
     m_w: int = 10                   # writes per writing process
     m_r: int = 10                   # reads per reading process
     s: int = 8 * 1024               # access size (8KB small / 8MB large)
-    seed: int = 0                   # for random read assignment
+    seed: int = 0                   # for random/hot read assignment
+    hot_frac: float = 0.0           # "hot" pattern: P(access in hot region)
+    hot_blocks: int = 0             # "hot" pattern: hot region, in blocks
+    pfs_drain: bool = False         # flush buffers to the PFS in-phase
+    tier: str = "ssd"               # burst-buffer tier: ssd | mem (SCR)
 
     @property
     def n(self) -> int:
@@ -96,6 +104,32 @@ def rn_r(n: int, s: int, model: str, p: int = 12, m: int = 10,
     return WorkloadConfig(
         f"RN-R/{model}", model, "contig", "random", n // 2, n // 2, p, m, m,
         s, seed
+    )
+
+
+def rn_r_hot(n: int, s: int, model: str, p: int = 12, m: int = 10,
+             seed: int = 0, hot_frac: float = 0.9,
+             hot_blocks: int = 16) -> WorkloadConfig:
+    """Hot-region read-after-write: ``hot_frac`` of the reads hammer the
+    first ``hot_blocks`` written blocks (a skewed-offset metadata hotspot;
+    fig8's workload for the adaptive router).  Runs on the memory
+    burst-buffer tier (SCR-preloaded, as in fig6) so the metadata path —
+    not the hot node's SSD — is the contended resource under study."""
+    return WorkloadConfig(
+        f"RN-R-hot/{model}", model, "contig", "hot", n // 2, n // 2, p, m,
+        m, s, seed, hot_frac=hot_frac, hot_blocks=hot_blocks, tier="mem"
+    )
+
+
+def ckpt_w(n: int, s: int, model: str, p: int = 12,
+           m: int = 10) -> WorkloadConfig:
+    """Checkpoint writers: contiguous N-1 writes followed by an in-phase
+    burst-buffer drain to the underlying PFS (fig7's overlap workload:
+    with ``linger > 0`` the tail attach batch's timer expires during the
+    drain, so the RPC round trip overlaps the PFS traffic)."""
+    return WorkloadConfig(
+        f"CKPT-W/{model}", model, "contig", None, n, 0, p, m, m, s,
+        pfs_drain=True
     )
 
 
@@ -142,6 +176,17 @@ def _read_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
         _random.Random(cfg.seed).shuffle(blocks)
         mine = blocks[rank * cfg.m_r : (rank + 1) * cfg.m_r]
         return [b * cfg.s for b in mine]
+    if cfg.read_pattern == "hot":
+        total = cfg.writers * cfg.m_w
+        hot = max(1, min(cfg.hot_blocks, total))
+        # Integer-combined seed: deterministic across processes (tuple
+        # seeding would go through hash()).
+        rng = _random.Random(cfg.seed * 1_000_003 + rank)
+        return [
+            (rng.randrange(hot) if rng.random() < cfg.hot_frac
+             else rng.randrange(total)) * cfg.s
+            for _ in range(cfg.m_r)
+        ]
     raise ValueError(cfg.read_pattern)
 
 
@@ -175,7 +220,7 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
     if cfg.write_pattern:
         for rank in range(cfg.writers):
             node = rank // cfg.p
-            fh = layer.open(rank, SHARED_FILE, node=node)
+            fh = layer.open(rank, SHARED_FILE, node=node, tier=cfg.tier)
             handles[rank] = fh
             if cfg.model == "session":
                 layer.session_open(fh)  # no-op query on the empty file
@@ -199,6 +244,14 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
             elif cfg.model == "mpiio":
                 layer.file_sync(fh)
             # posix: writes already attached.
+        if cfg.pfs_drain:
+            # Burst-buffer drain to the PFS INSIDE the write phase (no
+            # barrier): a posix writer's tail attach batch stays open
+            # across the drain, so with linger > 0 the DES's queue timer
+            # expires mid-phase and the RPC overlaps the PFS traffic.
+            for rank in range(cfg.writers):
+                fh = handles[rank]
+                fs.bfs_flush_file(fh.client, fh.bfs_handle)
 
     # ---- read phase ------------------------------------------------------
     verified = 0
@@ -208,7 +261,7 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
         for r in range(cfg.readers):
             cid = cfg.writers + r
             node = cfg.n_w + r // cfg.p
-            fh = layer.open(cid, SHARED_FILE, node=node)
+            fh = layer.open(cid, SHARED_FILE, node=node, tier=cfg.tier)
             rhandles[r] = fh
             if cfg.model == "session":
                 layer.session_open(fh)

@@ -35,7 +35,7 @@ import subprocess
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")
@@ -60,7 +60,6 @@ def input_specs(cfg, cell) -> Tuple[tuple, Dict[str, Any]]:
     import jax
     import jax.numpy as jnp
     from repro.launch import mesh as M
-    from repro.models import transformer as T
     from repro.models.frontends import extra_inputs
 
     B, S = cell.global_batch, cell.seq_len
@@ -252,13 +251,13 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
         print(f"  state/device: {rec['state_bytes_per_device']/2**30:.3f}GiB"
               + (f"  cache/device: {rec['cache_bytes_per_device']/2**30:.3f}GiB"
                  if "cache_bytes_per_device" in rec else ""))
-        print(f"  cost_analysis flops (1 while-trip): "
+        print("  cost_analysis flops (1 while-trip): "
               f"{rec.get('cost_flops_raw', 0):.3e}")
-        print(f"  HLO dot-FLOPs/device (unrolled): "
+        print("  HLO dot-FLOPs/device (unrolled): "
               f"{rec['hlo_flops_per_device']:.3e}")
-        print(f"  HLO HBM bytes/device (unrolled): "
+        print("  HLO HBM bytes/device (unrolled): "
               f"{rec['hlo_bytes_per_device']:.3e}")
-        print(f"  collective wire bytes/device: "
+        print("  collective wire bytes/device: "
               f"{coll.wire_bytes:.3e}  by kind: "
               + json.dumps({k: f"{v:.2e}" for k, v in coll.by_kind.items()}))
     return rec

@@ -13,8 +13,7 @@ DCN-like in real deployments).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import transformer as T
 from repro.models.config import ModelConfig, ShapeCell
 from repro.models.frontends import extra_inputs
-from repro.models.sharding import Rules, resolve_spec, resolve_tree, rules_for
+from repro.models.sharding import Rules, resolve_tree, rules_for
+from repro.models.sharding import resolve_spec  # noqa: F401  (re-export)
 from repro.train.optimizer import AdamWConfig, opt_state_specs
 
 

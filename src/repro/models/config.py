@@ -2,8 +2,8 @@
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Any, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Any, Tuple
 
 import jax.numpy as jnp
 

@@ -23,7 +23,6 @@ overflow tokens are dropped (standard dropping MoE), capacity factor 1.25.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -32,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.layers import _dense
-from repro.models.sharding import current_context, shard
+from repro.models.sharding import current_context
 
 try:  # jax >= 0.4.35 re-export
     shard_map = jax.shard_map

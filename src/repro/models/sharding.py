@@ -24,10 +24,9 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 Rules = Dict[str, Union[str, Tuple[str, ...], None]]

@@ -14,7 +14,6 @@ Three entry points:
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -342,10 +341,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     cross = cfg.kind == "encdec"
     cache: Params = {}
     if cfg.n_super > 0:
-        one = lambda: {
-            f"b{i}": _block_cache_init(bt, cfg, batch, max_len, cross)
-            for i, bt in enumerate(cfg.pattern)
-        }
+        def one():
+            return {
+                f"b{i}": _block_cache_init(bt, cfg, batch, max_len, cross)
+                for i, bt in enumerate(cfg.pattern)
+            }
+
         cache["blocks"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_super,) + x.shape),
             one(),

@@ -8,8 +8,7 @@ seq-sharded KV cache (attention archs) or an O(1) recurrent state
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

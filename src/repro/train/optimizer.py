@@ -26,7 +26,9 @@ class AdamWConfig:
 
 
 def adamw_init(params, opt: AdamWConfig) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, opt.state_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, opt.state_dtype)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -16,15 +16,14 @@ with shardings from :func:`repro.launch.mesh.state_shardings`.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.models.sharding import shard, shard_tree
+from repro.models.sharding import shard_tree
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
 TrainState = Dict[str, Any]  # {"params": ..., "opt": ..., "step": int32}
@@ -80,7 +79,7 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
 
             def mb_step(carry, mb):
                 gacc, lacc, aacc = carry
-                (l, a), g = grad_fn(params, mb)
+                (lval, a), g = grad_fn(params, mb)
                 # Pin each microbatch's contribution to the parameter
                 # sharding: the cross-data reduction becomes a
                 # reduce-scatter into the fsdp shard, not a full-gradient
@@ -88,7 +87,7 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
                 gacc = shard_tree(jax.tree.map(
                     lambda acc, gi: acc + gi.astype(jnp.float32) / M,
                     gacc, g), pspecs)
-                return (gacc, lacc + l / M, aacc + a["ce"] / M), None
+                return (gacc, lacc + lval / M, aacc + a["ce"] / M), None
 
             # Checkpoint the microbatch body: the scan VJP otherwise saves
             # every microbatch's full layer-input stack (M x depth x B_mb x

@@ -18,10 +18,10 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.checker import TracedRun
-from repro.core.consistency import CommitFS, SessionFS, make_fs
-from repro.core.model import (COMMIT_MODEL, COMMIT_RELAXED_MODEL, MODELS,
-                              POSIX_MODEL, SESSION_MODEL, Execution, MSC,
-                              OpType)
+from repro.core.consistency import CommitFS, SessionFS
+from repro.core.model import (
+    COMMIT_MODEL, COMMIT_RELAXED_MODEL, MODELS, POSIX_MODEL, SESSION_MODEL,
+    Execution, MSC)
 
 F = "/prop"
 

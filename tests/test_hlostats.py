@@ -5,7 +5,6 @@ whose analytic FLOPs are known exactly.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlostats
 

@@ -209,6 +209,63 @@ class TestCoalescing:
         assert len(queries) == 1 and queries[0].rpc_ranges == 8
 
 
+class TestVirtualClockMetadata:
+    """Anchors/edges stamped on flushed batches for the time-driven DES."""
+
+    def test_flush_carries_queue_anchors(self):
+        from repro.core.basefs import DEFAULT_LINGER
+
+        fs = BaseFS(batch=16)
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        for _ in range(4):
+            pfs.write(fh, b"x" * 64)
+        fs.drain()
+        writes = [e for e in fs.ledger.events
+                  if e.kind is EventKind.SSD_WRITE]
+        (attach,) = _rpc_events(fs, "attach")
+        # The queue opened after the FIRST member's write and its last
+        # member joined after the LAST write; the configured window is
+        # stamped for the DES's timer.
+        assert attach.opened_after == writes[0].seq
+        assert attach.last_after == writes[-1].seq
+        assert attach.linger == DEFAULT_LINGER
+
+    def test_first_ever_action_anchors_to_phase_start(self):
+        fs = BaseFS(batch=16)
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"z" * 64)
+        fs.bfs_attach(c, h, 0, 64)
+        # Client 1 queries with no prior ledger events of its own.
+        fs.server.query(1, "/f", 0, 64)
+        fs.drain()
+        q = next(e for e in _rpc_events(fs, "query") if e.client == 1)
+        assert q.opened_after == -1 and q.last_after == -1
+
+    def test_pass_through_events_carry_no_metadata(self):
+        fs = BaseFS()  # batch=0
+        pfs = PosixFS(fs)
+        w = pfs.open(0, "/f")
+        pfs.write(w, b"d" * 64)
+        r = pfs.open(1, "/f")
+        assert pfs.read(r, 64) == b"d" * 64
+        assert all(e.deps == () and e.opened_after == -1
+                   and e.last_after == -1 and e.linger == 0.0
+                   for e in fs.ledger.events)
+
+    def test_dep_flush_returns_flushed_seqs(self):
+        fs = BaseFS(batch=16)
+        c0 = fs.client(0)
+        h0 = fs.bfs_open(c0, "/f")
+        fs.bfs_write(c0, h0, b"y" * 128)
+        fs.bfs_attach(c0, h0, 0, 128)       # enqueued, in flight
+        seqs = fs.server.batcher.dep_flush_attaches("/f")
+        (attach,) = _rpc_events(fs, "attach")
+        assert seqs == [attach.seq]
+        assert fs.server.batcher.dep_flush_attaches("/f") == []
+
+
 class TestShardRouting:
     def test_shard_of_deterministic_and_stable(self):
         for n in (1, 2, 4, 8):

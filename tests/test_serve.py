@@ -15,7 +15,7 @@ import pytest
 from repro.configs.registry import tiny_config
 from repro.data.pipeline import synthetic_batch
 from repro.models import transformer as T
-from repro.serve.decode import generate, make_prefill, make_serve_step
+from repro.serve.decode import generate
 
 FAMILIES = ["starcoder2-3b", "qwen3-32b", "falcon-mamba-7b",
             "recurrentgemma-9b", "granite-moe-1b-a400m", "whisper-small"]

@@ -8,7 +8,6 @@ import numpy as np
 
 from repro.configs.registry import ARCHS, get_config, tiny_config
 from repro.models import transformer as T
-from repro.models.config import ModelConfig
 
 
 def test_padded_vocab_multiple_and_coverage():
