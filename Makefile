@@ -5,10 +5,15 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # Formatting ratchet: files verified to conform to `ruff format`.  Run
 # `ruff format <file>` and add it here; once the list covers the tree,
 # replace it with the bare directories.  (`ruff check` already runs
-# repo-wide — only the formatter is ratcheted.)
-FMT_PATHS := benchmarks/__init__.py
+# repo-wide — only the formatter is ratcheted.)  PR 4 enlisted its new
+# modules; the legacy modules it touched keep the 79-column paper style
+# until a formatter run can verify them.
+FMT_PATHS := benchmarks/__init__.py \
+	benchmarks/perf.py \
+	src/repro/core/extents.py
 
-.PHONY: test test-fast lint bench bench-fig7 bench-fig8 bench-smoke
+.PHONY: test test-fast lint bench bench-fig7 bench-fig8 bench-smoke \
+	perf perf-full
 
 # Tier-1 verification target (same invocation as ROADMAP.md).
 test:
@@ -35,3 +40,13 @@ bench-fig8:
 # One minimal point per figure through the benchmarks.run machinery.
 bench-smoke:
 	$(PYTHON) -m pytest -x -q tests/test_bench_smoke.py
+
+# Wall-clock / peak-RSS harness (BENCH_pr4.json): fast grid, both data
+# planes (extent vs byte-moving materialize).
+perf:
+	$(PYTHON) -m benchmarks.perf --grid fast
+
+# Paper-scale grid on the extent plane (the byte plane at full scale is
+# the ~15 GB RAM ceiling the extent plane removed).
+perf-full:
+	$(PYTHON) -m benchmarks.perf --grid full

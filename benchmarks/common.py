@@ -7,11 +7,15 @@ drives all figures, prints the tables, writes ``artifacts/bench/*.csv``,
 and summarizes the paper-claim validation.
 
 Scale note: the paper runs up to 16 nodes x 12 procs with 10 x 8MB
-accesses per proc (~15 GB of real buffered bytes at peak).  The container
-has ~33 GB RAM shared with the dry-run sweep, so LARGE-access runs use a
-reduced (procs, ops) grid — the DES prices per-byte time identically, and
-every read is still verified byte-for-byte.  SMALL-access runs use the
-paper's full 12 procs/node.
+accesses per proc (~15 GB of buffered bytes at peak).  Since the
+zero-copy extent data plane landed (PR 4), BaseFS stores payload
+*descriptors* instead of bytes and reads are verified symbolically
+(:mod:`repro.core.extents`), so EVERY figure runs the paper's full grid
+within container RAM — the old reduced LARGE-access (procs, ops) grid is
+gone, and fig7/fig8 sweep up to 2048 clients.  ``benchmarks.run
+--materialize`` restores the byte-moving plane (byte-for-byte
+verification) for regression comparison; ``benchmarks/perf.py`` tracks
+the wall-clock/peak-RSS gap between the two planes in ``BENCH_pr4.json``.
 """
 
 from __future__ import annotations

@@ -46,7 +46,9 @@ def _run_point(factory, name: str, label: str, n: int, model: str,
 def run(fast: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     nodes = NODES[:2] if fast else NODES
-    for label, p, m in (("8KB", 12, 10), ("8MB", 4, 4)):
+    # Full paper grid for BOTH access sizes (see fig3: the extent data
+    # plane lifted the RAM ceiling on the 8MB rows).
+    for label, p, m in (("8KB", 12, 10), ("8MB", 12, 10)):
         for n in nodes:
             for model in ("commit", "session"):
                 for factory, name in ((cc_r, "CC-R"), (cs_r, "CS-R")):

@@ -4,7 +4,7 @@ The paper's small-random-read gap (Fig 4b/6) is a *server* artifact: the
 single-threaded master serializes one query RPC per commit-model read
 while session reads resolve owners from a cached map.  This sweep re-runs
 the RN-R workload (random read-after-write, 8KB accesses) against the
-sharded metadata service (shards ∈ {1, 2, 4, 8}, up to 1024 clients) and
+sharded metadata service (shards ∈ {1, 2, 4, 8}, up to 2048 clients) and
 asks whether spreading the query load over independent masters closes the
 gap — the contention-relief direction explored for DAOS (arXiv:2404.03107)
 and large-scale object stores (arXiv:1807.02562).
@@ -42,7 +42,7 @@ from benchmarks.common import KB, Claim, pick, scales
 from repro.io.workloads import TOPOLOGY, ckpt_w, cn_w, rn_r, run_workload
 
 SHARDS = (1, 2, 4, 8)
-NODES = (16, 32, 64)        # x16 procs/node -> 256..1024 clients
+NODES = (16, 32, 64, 128)   # x16 procs/node -> 256..2048 clients
 FAST_NODES = (32,)          # 512 clients
 PROCS = 16
 M_OPS = 10

@@ -24,18 +24,30 @@ Expected outcome (validated by CLAIMS):
  4. session reads resolve owners from the session-open snapshot and are
     routing-insensitive.
 
-Reads are verified byte-for-byte; the skew generator is seeded
-(``benchmarks.run --seed``) and reproducible.
+A second workload, ``RN-R-hotset`` (commit model), turns the tables on
+width adaptation: its hot blocks are NON-contiguous, spaced ``SHARDS``
+blocks apart (:func:`repro.io.workloads.rn_r_hot_set`).  Static 64 KiB
+striping spreads that set round-robin by construction — but once the
+adaptive router shrinks the stripe to the 8 KB access size, every hot
+stripe index is congruent mod ``SHARDS`` and the WHOLE hot set collides
+on one shard.  Only the rebalancer's override/move path (explicit
+per-stripe overrides to the coldest shard, paid as ``migrate`` RPCs) can
+spread it again; the hotset claims pin down that the rescue actually
+happens.
+
+Reads are verified (symbolically, on the extent data plane); the skew
+generator is seeded (``benchmarks.run --seed``) and reproducible.
 """
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, List
 
 from benchmarks.common import KB, Claim, pick, scales
-from repro.io.workloads import rn_r_hot, run_workload
+from repro.io.workloads import rn_r_hot, rn_r_hot_set, run_workload
 
-NODES = (16, 32)            # x16 procs/node -> 256/512 clients
+NODES = (16, 32, 128)       # x16 procs/node -> 256/512/2048 clients
 FAST_NODES = (16,)
 PROCS = 16
 M_OPS = 10
@@ -46,12 +58,12 @@ HOT_BLOCKS = 16             # hot region: 16 x 8KB = two 64KiB stripes
 
 
 def _row(n: int, model: str, shards: int, adaptive: bool,
-         seed: int) -> Dict:
-    cfg = rn_r_hot(n, ACCESS, model, p=PROCS, m=M_OPS, seed=seed,
-                   hot_frac=HOT_FRAC, hot_blocks=HOT_BLOCKS)
+         seed: int, factory=rn_r_hot, workload: str = "RN-R-hot") -> Dict:
+    cfg = factory(n, ACCESS, model, p=PROCS, m=M_OPS, seed=seed,
+                  hot_frac=HOT_FRAC, hot_blocks=HOT_BLOCKS)
     res = run_workload(cfg, shards=shards, adaptive=adaptive)
     return {
-        "workload": "RN-R-hot", "clients": cfg.n * PROCS,
+        "workload": workload, "clients": cfg.n * PROCS,
         "shards": shards, "routing": "adaptive" if adaptive else "static",
         "model": model, "seed": seed,
         "read_bw": round(res.read_bandwidth),
@@ -69,6 +81,16 @@ def run(fast: bool = False, seed: int = 0) -> List[Dict]:
             rows.append(_row(n, model, 1, False, seed))
             rows.append(_row(n, model, SHARDS, False, seed))
             rows.append(_row(n, model, SHARDS, True, seed))
+        # Non-contiguous hot set (commit only: the contended query path):
+        # static striping is balanced by construction; adaptive width
+        # collides the set on one shard and the override/move path must
+        # rescue it.  hot_stride is pinned to SHARDS explicitly — the
+        # collision needs hot stripe indices congruent mod the shard
+        # count.
+        hotset = partial(rn_r_hot_set, hot_stride=SHARDS)
+        for shards, adaptive in ((1, False), (SHARDS, False), (SHARDS, True)):
+            rows.append(_row(n, "commit", shards, adaptive, seed,
+                             factory=hotset, workload="RN-R-hotset"))
     return rows
 
 
@@ -85,6 +107,33 @@ def _max_clients(rows: List[Dict]) -> int:
 def _has_grid(rows: List[Dict]) -> bool:
     return ({1, SHARDS} <= set(scales(rows, "shards", model="commit"))
             and "adaptive" in scales(rows, "routing", shards=SHARDS))
+
+
+def _bw_set(rows: List[Dict], shards: int, routing: str,
+            clients: int) -> float:
+    return pick(rows, workload="RN-R-hotset", model="commit", shards=shards,
+                routing=routing, clients=clients)["read_bw"]
+
+
+def _has_hotset(rows: List[Dict]) -> bool:
+    sub = [r for r in rows if r["workload"] == "RN-R-hotset"]
+    return ({1, SHARDS} <= set(scales(sub, "shards"))
+            and "adaptive" in scales(sub, "routing", shards=SHARDS))
+
+
+#: The rebalancer needs enough read traffic to cross its observation
+#: windows (REBALANCE_OPS rounds) before the override/move rescue shows
+#: up in bandwidth: below this many clients the hot-set grid is
+#: under-resolved and the rescue claim SKIPs.  Both configured grids
+#: start at 256 clients, so this fires only on shrunken grids (e.g. the
+#: bench-smoke tier-1 run, which monkeypatches FAST_NODES down to 2
+#: nodes = 32 clients).
+HOTSET_MIN_CLIENTS = 256
+
+
+def _hotset_clients(rows: List[Dict]) -> List[int]:
+    return [c for c in scales(rows, "clients", workload="RN-R-hotset")
+            if c >= HOTSET_MIN_CLIENTS]
 
 
 CLAIMS = [
@@ -126,5 +175,31 @@ CLAIMS = [
             for c in scales(rows, "clients", workload="RN-R-hot")
         ),
         requires=_has_grid,
+    ),
+    Claim(
+        "non-contiguous hot SET: static striping is balanced by "
+        "construction (8 static shards >= 2x single shard commit reads)",
+        lambda rows: all(
+            _bw_set(rows, SHARDS, "static", c)
+            >= 2.0 * _bw_set(rows, 1, "static", c)
+            for c in scales(rows, "clients", workload="RN-R-hotset")
+        ),
+        requires=_has_hotset,
+    ),
+    Claim(
+        "hot SET under adaptive width collides on one shard; the "
+        "rebalancer's override/move path claws back most of the loss "
+        "(migrations paid, adaptive >= 2.5x the fully-collided single "
+        "shard and >= 0.4x balanced static at 8 shards)",
+        lambda rows: all(
+            pick(rows, workload="RN-R-hotset", shards=SHARDS,
+                 routing="adaptive", clients=c)["rpc_migrate"] > 0
+            and _bw_set(rows, SHARDS, "adaptive", c)
+            >= 0.4 * _bw_set(rows, SHARDS, "static", c)
+            and _bw_set(rows, SHARDS, "adaptive", c)
+            >= 2.5 * _bw_set(rows, 1, "static", c)
+            for c in _hotset_clients(rows)
+        ),
+        requires=lambda rows: _has_hotset(rows) and _hotset_clients(rows),
     ),
 ]

@@ -1,0 +1,228 @@
+"""Wall-clock / peak-RSS perf harness — the repo's perf trajectory.
+
+Measures one representative paper-scale point per figure, split into
+BaseFS *execution* time (the in-process run that produces the ledger)
+and ``CostModel.replay`` time (the DES pricing), plus the process peak
+RSS — on both data planes:
+
+* ``extent`` — the default zero-copy plane (payload descriptors,
+  symbolic verification);
+* ``materialize`` — the retained byte-moving fallback
+  (``BaseFS(materialize=True)``), the pre-PR-4 behaviour.
+
+Each (figure, mode) measurement runs in its OWN subprocess so
+``ru_maxrss`` is attributable; results merge into ``BENCH_pr4.json`` at
+the repo root — the before/after record for the data-plane refactor and
+the baseline for future perf PRs.
+
+    PYTHONPATH=src python -m benchmarks.perf [--grid fast|full]
+        [--figs fig3,...] [--modes extent,materialize] [--out PATH]
+
+``--grid fast`` (default, the CI job) measures both modes at reduced
+scale.  ``--grid full`` measures the paper's FULL grid points — e.g.
+fig3's 16 nodes x 12 procs x 10 x 8MB, ~15 GB of buffered bytes in byte
+mode — and therefore defaults to the extent plane only; pass
+``--modes extent,materialize`` explicitly on a big-RAM machine to price
+the byte plane at full scale too.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List, Optional
+
+from benchmarks.common import KB, MB
+from repro.core.costmodel import CostModel
+from repro.io.scr import SCRConfig, run_scr
+from repro.io.workloads import cc_r, cn_w, rn_r, rn_r_hot, run_workload, set_topology
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr4.json"))
+MODES = ("extent", "materialize")
+
+
+def _workload_point(cfg, **overrides) -> Callable[[], Dict]:
+    def measure() -> Dict:
+        timings: Dict = {}
+        run_workload(cfg, timings=timings, **overrides)
+        return timings
+
+    return measure
+
+
+def _scr_point(cfg: SCRConfig) -> Callable[[], Dict]:
+    def measure() -> Dict:
+        timings: Dict = {}
+        run_scr(cfg, timings=timings)
+        return timings
+
+    return measure
+
+
+def _dlio_point(hosts: int, per_host: int) -> Callable[[], Dict]:
+    def measure() -> Dict:
+        from repro.data.dlio import PreloadedStore
+
+        t0 = time.perf_counter()
+        store = PreloadedStore("commit", hosts, per_host, sample_bytes=116 * KB)
+        store.preload()
+        store.run_epoch(0)
+        store.fs.drain()
+        t1 = time.perf_counter()
+        CostModel().replay(store.fs.ledger)
+        t2 = time.perf_counter()
+        events = len(store.fs.ledger.events)
+        return {"exec_s": t1 - t0, "replay_s": t2 - t1, "events": events}
+
+    return measure
+
+
+def _points(grid: str) -> Dict[str, Dict]:
+    """Per-figure representative points: {fig: {point, measure}}."""
+    fast = grid == "fast"
+    nodes = 4 if fast else 16
+    big_nodes = 32 if fast else 128
+    hot_nodes = 16 if fast else 128
+    scr_nodes = 3 if fast else 17
+    particles = 1_000_000 if fast else 10_000_000
+    hosts = 4 if fast else 16
+    scr_cfg = SCRConfig(n=scr_nodes, model="commit", p=12, particles=particles)
+    cfg3 = cn_w(nodes, 8 * MB, "commit", p=12, m=10)
+    cfg4 = cc_r(nodes, 8 * MB, "commit", p=12, m=10)
+    cfg7 = rn_r(big_nodes, 8 * KB, "commit", p=16, m=10)
+    cfg8 = rn_r_hot(hot_nodes, 8 * KB, "commit", p=16, m=10)
+    return {
+        "fig3": {
+            "point": f"CN-W commit 8MB, {nodes} nodes x 12p x 10 ops",
+            "measure": _workload_point(cfg3),
+        },
+        "fig4": {
+            "point": f"CC-R commit 8MB, {nodes} nodes x 12p x 10 ops",
+            "measure": _workload_point(cfg4),
+        },
+        "fig5": {
+            "point": f"SCR HACC-IO commit, {scr_nodes} nodes, {particles} particles",
+            "measure": _scr_point(scr_cfg),
+        },
+        "fig6": {
+            "point": f"DL preloaded commit 116KB samples, {hosts} hosts x 128",
+            "measure": _dlio_point(hosts, 128),
+        },
+        "fig7": {
+            "point": f"RN-R commit 8KB, 8 shards, {16 * big_nodes} clients",
+            "measure": _workload_point(cfg7, shards=8),
+        },
+        "fig8": {
+            "point": f"RN-R-hot commit 8KB, 8 shards adaptive, {16 * hot_nodes} clients",
+            "measure": _workload_point(cfg8, shards=8, adaptive=True),
+        },
+    }
+
+
+def _run_one(fig: str, mode: str, grid: str) -> Dict:
+    """Child-process entry: one measurement, JSON on stdout."""
+    set_topology(materialize=(mode == "materialize"))
+    result = _points(grid)[fig]["measure"]()
+    peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    result["peak_rss_mb"] = round(peak_kb / 1024.0, 1)
+    result["exec_s"] = round(result["exec_s"], 3)
+    result["replay_s"] = round(result["replay_s"], 3)
+    return result
+
+
+def _spawn(fig: str, mode: str, grid: str) -> Dict:
+    cmd = [sys.executable, "-m", "benchmarks.perf", "--one", fig, "--mode", mode]
+    cmd += ["--grid", grid]
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    if proc.returncode != 0:
+        # One crashed child (OOM on a shared runner, say) must not lose
+        # the measurements already taken: record the failure in place.
+        tail = (proc.stderr or proc.stdout or "").strip().splitlines()[-3:]
+        return {"error": f"child exited {proc.returncode}: " + " | ".join(tail)}
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", choices=("fast", "full"), default="fast")
+    ap.add_argument("--figs", default="", help="comma list (default: all)")
+    ap.add_argument(
+        "--modes",
+        default=None,
+        help="comma list of data planes (default: extent,materialize on "
+        "the fast grid; extent only on the full grid — the byte plane "
+        "at full scale IS the lifted RAM ceiling)",
+    )
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    ap.add_argument("--one", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--mode", default="extent", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.one:
+        print(json.dumps(_run_one(args.one, args.mode, args.grid)))
+        return 0
+
+    points = _points(args.grid)
+    figs = [f for f in args.figs.split(",") if f] or list(points)
+    unknown = [f for f in figs if f not in points]
+    if unknown:
+        print(f"unknown figure(s): {', '.join(unknown)}", file=sys.stderr)
+        return 2
+    if args.modes is None:
+        modes = MODES if args.grid == "fast" else ("extent",)
+    else:
+        modes = tuple(m for m in args.modes.split(",") if m)
+
+    failed = 0
+    grid_results: Dict[str, Dict] = {}
+    for fig in figs:
+        entry: Dict = {"point": points[fig]["point"]}
+        for mode in modes:
+            t0 = time.perf_counter()
+            entry[mode] = _spawn(fig, mode, args.grid)
+            dt = time.perf_counter() - t0
+            if "error" in entry[mode]:
+                failed += 1
+                print(f"  {fig} [{mode:11s}] FAILED: {entry[mode]['error']}")
+                continue
+            print(
+                f"  {fig} [{mode:11s}] exec {entry[mode]['exec_s']:8.3f}s  "
+                f"replay {entry[mode]['replay_s']:7.3f}s  "
+                f"rss {entry[mode]['peak_rss_mb']:8.1f}MB  "
+                f"({points[fig]['point']}; child {dt:.1f}s)"
+            )
+        ext, mat = entry.get("extent", {}), entry.get("materialize", {})
+        if ext.get("exec_s") and mat.get("exec_s"):
+            entry["exec_speedup"] = round(mat["exec_s"] / ext["exec_s"], 2)
+        if ext.get("peak_rss_mb") and mat.get("peak_rss_mb"):
+            entry["rss_reduction"] = round(mat["peak_rss_mb"] / ext["peak_rss_mb"], 2)
+        grid_results[fig] = entry
+
+    doc: Dict = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            doc = json.load(f)
+    doc.setdefault("pr", 4)
+    doc.setdefault(
+        "note",
+        "Wall-clock + peak-RSS per figure, extent (zero-copy) vs "
+        "materialize (byte-moving) data plane; see benchmarks/perf.py.",
+    )
+    # Merge per figure: a partial --figs/--modes run refreshes only the
+    # figures it measured, never discarding the rest of the record.
+    doc.setdefault("grids", {}).setdefault(args.grid, {}).update(grid_results)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"wrote {args.out} [{args.grid} grid: {', '.join(figs)}]")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

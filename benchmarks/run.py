@@ -13,15 +13,20 @@ tests of the consistency layers as much as performance measurements.
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig7]
                                             [--shards N] [--batch N]
                                             [--linger USEC] [--stripe BYTES]
-                                            [--adaptive] [--seed N]
+                                            [--adaptive] [--materialize]
+                                            [--seed N]
 
 ``--shards``/``--batch``/``--linger``/``--stripe``/``--adaptive`` set
 the deployment topology for figs 3-6 (fig7 sweeps shard counts and the
 send-queue linger itself but honours ``--batch``; fig8 sweeps routing
-itself).  ``--seed`` re-seeds the skewed-offset generators of figures
-that take one (fig8), keeping their grids reproducible.  Claims whose
-``requires`` predicate is unmet on the selected grid (e.g. under
-``--fast``) are reported SKIP and do not affect the exit status.
+itself).  ``--materialize`` selects the byte-moving data plane (real
+bytes, byte-for-byte verification) instead of the default zero-copy
+extent plane — the ledgers and DES results are identical by
+construction, only RAM/wall-clock differ.  ``--seed`` re-seeds the
+skewed-offset generators of figures that take one (fig8), keeping their
+grids reproducible.  Claims whose ``requires`` predicate is unmet on the
+selected grid (e.g. under ``--fast``) are reported SKIP and do not
+affect the exit status.
 """
 
 from __future__ import annotations
@@ -78,6 +83,11 @@ def main(argv=None) -> int:
                     help="metadata stripe width in bytes (default 64KiB)")
     ap.add_argument("--adaptive", action="store_true", default=None,
                     help="adaptive stripe widths + shard rebalancing")
+    ap.add_argument("--materialize", action="store_true", default=None,
+                    help="byte-moving data plane (legacy mode: real bytes "
+                         "move and reads verify byte-for-byte; default is "
+                         "the zero-copy extent plane with symbolic "
+                         "verification)")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for skewed-offset generators (fig8)")
     args = ap.parse_args(argv)
@@ -93,6 +103,7 @@ def main(argv=None) -> int:
         shards=args.shards, batch=args.batch,
         linger=None if args.linger is None else args.linger * 1e-6,
         stripe=args.stripe, adaptive=args.adaptive,
+        materialize=args.materialize,
     )
 
     all_pass = True

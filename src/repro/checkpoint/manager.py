@@ -152,7 +152,8 @@ class CheckpointManager:
         self._open_session(fh)
         size = self.layer.stat_size(fh)
         self.layer.seek(fh, 0)
-        return manifest_from_json(self.layer.read(fh, size))
+        # The read is a lazy payload; JSON decoding needs the real bytes.
+        return manifest_from_json(bytes(self.layer.read(fh, size)))
 
     def restore(self, step: int, template: Any,
                 num_hosts_new: Optional[int] = None,
@@ -206,8 +207,11 @@ class CheckpointManager:
                     off = part["offset"] + (lo - rs) * meta["rowbytes"]
                     self.layer.seek(fh, off)
                     data = self.layer.read(fh, (hi - lo) * meta["rowbytes"])
+                    # Checkpoint state round-trips REAL bytes: materialize
+                    # the lazy payload at the consumer.
                     buf[lo:hi] = np.frombuffer(
-                        data, np.uint8).reshape(hi - lo, meta["rowbytes"])
+                        bytes(data), np.uint8).reshape(hi - lo,
+                                                       meta["rowbytes"])
             arr = buf.tobytes()
             arrays[path] = np.frombuffer(arr, dtype).reshape(shape).copy()
         return deserialize_tree(template, arrays)

@@ -1,6 +1,7 @@
 """Core of the reproduction: the paper's contribution, executable.
 
 * :mod:`repro.core.intervals`   — interval maps (paper §5.1.2 trees)
+* :mod:`repro.core.extents`     — zero-copy data plane (lazy payload extents)
 * :mod:`repro.core.basefs`      — BaseFS primitives (Table 5) + event ledger
 * :mod:`repro.core.consistency` — PosixFS / CommitFS / SessionFS / MPIIOFS (Table 6)
 * :mod:`repro.core.model`       — formal SCNF framework (§4, Table 4)
@@ -9,6 +10,17 @@
 """
 
 from repro.core.basefs import BaseFS, EventKind, EventLedger
+from repro.core.extents import (
+    ByteSlab,
+    Chain,
+    ExtentFile,
+    ExtentLog,
+    PatternExtent,
+    Payload,
+    ZeroExtent,
+    as_payload,
+    concat,
+)
 from repro.core.consistency import (
     CommitFS,
     MPIIOFS,
@@ -31,6 +43,15 @@ __all__ = [
     "BaseFS",
     "EventKind",
     "EventLedger",
+    "Payload",
+    "ByteSlab",
+    "PatternExtent",
+    "ZeroExtent",
+    "Chain",
+    "ExtentLog",
+    "ExtentFile",
+    "as_payload",
+    "concat",
     "CommitFS",
     "MPIIOFS",
     "PosixFS",

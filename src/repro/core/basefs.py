@@ -1,8 +1,8 @@
 """BaseFS — the paper's base-layer burst-buffer PFS (§5.1, Table 5).
 
 BaseFS provides *no* implicit consistency.  Each logical client buffers its
-writes in a node-local burst buffer (here: an in-RAM bytearray standing in
-for the Intel 910 SSD); visibility between clients is established only by
+writes in a node-local burst buffer (here: an in-process extent log standing
+in for the Intel 910 SSD); visibility between clients is established only by
 explicit ``attach`` / ``query`` synchronization primitives handled by a
 single global server.  Consistency layers (PosixFS/CommitFS/SessionFS/
 MPIIOFS, see :mod:`repro.core.consistency`) are built on these primitives.
@@ -11,8 +11,17 @@ Everything observable by the cost model is recorded in an :class:`EventLedger`:
 per-client SSD bytes, client-to-client transfer bytes, underlying-PFS bytes,
 and every server RPC with its type and payload size.  The discrete-event
 cost model (:mod:`repro.core.costmodel`) replays the ledger against hardware
-constants to produce bandwidth numbers; BaseFS itself moves real bytes so
-correctness is testable end-to-end.
+constants to produce bandwidth numbers.
+
+Data plane: burst buffers and PFS files store lazy *payload extents*
+(:mod:`repro.core.extents`) instead of real byte arrays — a write appends
+an extent descriptor, a read returns (re-coalesced) slices, and the
+deterministic-pattern benchmarks verify reads symbolically with zero byte
+materialization, which is what lets the paper's full ~15 GB grids run in
+container RAM.  Correctness stays testable end-to-end: any caller that
+genuinely needs bytes materializes lazily (``bytes(payload)``), and
+``BaseFS(materialize=True)`` retains the byte-moving fallback, producing
+an event-for-event identical ledger by construction.
 """
 
 from __future__ import annotations
@@ -22,6 +31,8 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.extents import (ExtentFile, ExtentLog, Payload,  # noqa: F401
+                                ZeroExtent, as_payload, concat)
 from repro.core.intervals import BufferIntervalMap, Interval, OwnerIntervalMap
 from repro.core.routing import DEFAULT_STRIPE, StaticRouter, make_router
 from repro.core.routing import shard_of  # noqa: F401  (re-export, see below)
@@ -99,6 +110,12 @@ class EventLedger:
         # Per-client seq of the most recently appended event; the send
         # queues use it to stamp virtual-clock anchors on flushed batches.
         self.last_seq: Dict[int, int] = {}
+        # Incremental aggregates maintained by record(): count()/
+        # total_bytes() answer in O(1) instead of scanning the full
+        # event list (which the benchmark drivers query per phase).
+        self._count_by_type: Dict[Tuple[EventKind, str], int] = {}
+        self._count_by_kind: Dict[EventKind, int] = {}
+        self._bytes_by_kind: Dict[EventKind, int] = {}
 
     def record(self, kind: EventKind, client: int, nbytes: int = 0,
                rpc_type: str = "", peer: int = -1, rpc_ranges: int = 1,
@@ -115,6 +132,10 @@ class EventLedger:
                   opened_after, last_after, forced_after)
         )
         self.last_seq[client] = seq
+        key = (kind, rpc_type)
+        self._count_by_type[key] = self._count_by_type.get(key, 0) + 1
+        self._count_by_kind[kind] = self._count_by_kind.get(kind, 0) + 1
+        self._bytes_by_kind[kind] = self._bytes_by_kind.get(kind, 0) + nbytes
 
     def mark_phase(self, name: str) -> None:
         """Global barrier + phase boundary for the cost model."""
@@ -126,46 +147,54 @@ class EventLedger:
         for hook in self.on_barrier:
             hook()
         self.events.clear()
+        self._count_by_type.clear()
+        self._count_by_kind.clear()
+        self._bytes_by_kind.clear()
 
     # ---- aggregate views used by tests and the cost model ----
     def count(self, kind: EventKind, rpc_type: Optional[str] = None) -> int:
-        return sum(
-            1
-            for e in self.events
-            if e.kind is kind and (rpc_type is None or e.rpc_type == rpc_type)
-        )
+        if rpc_type is None:
+            return self._count_by_kind.get(kind, 0)
+        return self._count_by_type.get((kind, rpc_type), 0)
 
     def total_bytes(self, kind: EventKind) -> int:
-        return sum(e.nbytes for e in self.events if e.kind is kind)
+        return self._bytes_by_kind.get(kind, 0)
 
 
 # --------------------------------------------------------------------------
 # Underlying system-level PFS (Lustre stand-in).
 # --------------------------------------------------------------------------
 class UnderlyingPFS:
-    """Flat byte-addressed files; the slow shared tier below BaseFS."""
+    """Flat byte-addressed files; the slow shared tier below BaseFS.
 
-    def __init__(self, ledger: EventLedger) -> None:
-        self._files: Dict[str, bytearray] = {}
+    Files are :class:`~repro.core.extents.ExtentFile` payload maps:
+    overlapping writes overwrite, reads zero-fill gaps and anything past
+    EOF — byte-mode semantics, without holding the bytes.
+    """
+
+    def __init__(self, ledger: EventLedger, materialize: bool = False) -> None:
+        self._files: Dict[str, ExtentFile] = {}
         self._ledger = ledger
+        self.materialize = materialize
 
-    def write(self, client: int, path: str, offset: int, data: bytes) -> None:
-        buf = self._files.setdefault(path, bytearray())
-        if len(buf) < offset + len(data):
-            buf.extend(b"\0" * (offset + len(data) - len(buf)))
-        buf[offset : offset + len(data)] = data
-        self._ledger.record(EventKind.PFS_WRITE, client, len(data))
+    def write(self, client: int, path: str, offset: int, data) -> None:
+        payload = as_payload(data)
+        if self.materialize:
+            payload = payload.materialized()
+        self._files.setdefault(path, ExtentFile()).write(offset, payload)
+        self._ledger.record(EventKind.PFS_WRITE, client, len(payload))
 
-    def read(self, client: int, path: str, offset: int, size: int) -> bytes:
-        buf = self._files.get(path, bytearray())
-        out = bytes(buf[offset : offset + size])
-        if len(out) < size:  # reads past PFS EOF are zero-filled
-            out += b"\0" * (size - len(out))
+    def read(self, client: int, path: str, offset: int, size: int) -> Payload:
+        f = self._files.get(path)
+        # ExtentFile.read zero-fills gaps and reads past EOF already; an
+        # unknown path is all zeros.
+        out = f.read(offset, size) if f is not None else ZeroExtent(size)
         self._ledger.record(EventKind.PFS_READ, client, size)
         return out
 
     def size(self, path: str) -> int:
-        return len(self._files.get(path, b""))
+        f = self._files.get(path)
+        return f.size if f is not None else 0
 
 
 # --------------------------------------------------------------------------
@@ -600,36 +629,39 @@ class BFSClient:
         self.id = client_id
         self.node = node
         self.tier = tier  # "ssd" (Intel 910) or "mem" (SCR memory buffer)
-        self.buffer = bytearray()  # node-local burst-buffer file (this client's)
+        # Node-local burst-buffer file (this client's): an append-only
+        # extent log — holds payload descriptors, not bytes.
+        self.buffer = ExtentLog()
         self.files: Dict[int, _OpenFile] = {}
         self._next_handle = itertools.count(1)
 
     # ---- buffer helpers ----
-    def _buffer_append(self, data: bytes) -> int:
-        off = len(self.buffer)
-        self.buffer.extend(data)
-        return off
+    def _buffer_append(self, payload: Payload) -> int:
+        return self.buffer.append(payload)
 
-    def buffer_read(self, buf_start: int, size: int) -> bytes:
-        return bytes(self.buffer[buf_start : buf_start + size])
+    def buffer_read(self, buf_start: int, size: int) -> Payload:
+        return self.buffer.read(buf_start, size)
 
 
 #: Process-wide deployment topology used by ``BaseFS()`` when the caller
 #: does not pass explicit values: metadata-server shard count, RPC batch
 #: size (0 = off), send-queue linger window (seconds; None = default),
-#: stripe width (bytes) and adaptive routing.  ``benchmarks.run
-#: --shards/--batch/--linger/--stripe/--adaptive`` sets these so every
-#: figure (including SCR and DLIO, which build their own BaseFS) runs on
-#: the same deployment.
+#: stripe width (bytes), adaptive routing, and the data-plane mode
+#: (``materialize=True`` = the byte-moving fallback).  ``benchmarks.run
+#: --shards/--batch/--linger/--stripe/--adaptive/--materialize`` sets
+#: these so every figure (including SCR and DLIO, which build their own
+#: BaseFS) runs on the same deployment.
 TOPOLOGY = {"shards": 1, "batch": 0, "linger": None,
-            "stripe": DEFAULT_STRIPE, "adaptive": False}
+            "stripe": DEFAULT_STRIPE, "adaptive": False,
+            "materialize": False}
 
 
 def set_topology(shards: Optional[int] = None,
                  batch: Optional[int] = None,
                  linger: Optional[float] = None,
                  stripe: Optional[int] = None,
-                 adaptive: Optional[bool] = None) -> None:
+                 adaptive: Optional[bool] = None,
+                 materialize: Optional[bool] = None) -> None:
     """Set process-wide defaults for the simulated deployment."""
     if shards is not None:
         TOPOLOGY["shards"] = shards
@@ -641,6 +673,8 @@ def set_topology(shards: Optional[int] = None,
         TOPOLOGY["stripe"] = stripe
     if adaptive is not None:
         TOPOLOGY["adaptive"] = adaptive
+    if materialize is not None:
+        TOPOLOGY["materialize"] = materialize
 
 
 class BaseFS:
@@ -652,9 +686,14 @@ class BaseFS:
     client-side RPC send queues with that many range descriptors per
     message; ``linger`` is the queue's coalescing window in seconds (0 =
     send-immediate, ``None`` = :data:`DEFAULT_LINGER`); ``adaptive``
-    enables access-size stripe widths + load rebalancing.  ``None``
-    means "use the process-wide :data:`TOPOLOGY`"; the shipped defaults
-    reproduce the paper's configuration.
+    enables access-size stripe widths + load rebalancing;
+    ``materialize`` selects the byte-moving data plane (every written
+    payload converted to real bytes eagerly — the legacy mode, retained
+    as the golden-ledger reference and for RAM/wall-clock comparison;
+    the ledger it produces is event-for-event identical by
+    construction).  ``None`` means "use the process-wide
+    :data:`TOPOLOGY`"; the shipped defaults reproduce the paper's
+    configuration on the zero-copy extent plane.
     """
 
     def __init__(self, num_workers: int = 23,
@@ -662,7 +701,8 @@ class BaseFS:
                  stripe: Optional[int] = None,
                  batch: Optional[int] = None,
                  linger: Optional[float] = None,
-                 adaptive: Optional[bool] = None) -> None:
+                 adaptive: Optional[bool] = None,
+                 materialize: Optional[bool] = None) -> None:
         self.ledger = EventLedger()
         self.server = GlobalServer(
             self.ledger, num_workers=num_workers,
@@ -672,7 +712,9 @@ class BaseFS:
             linger=TOPOLOGY["linger"] if linger is None else linger,
             adaptive=(TOPOLOGY["adaptive"] if adaptive is None else adaptive),
         )
-        self.pfs = UnderlyingPFS(self.ledger)
+        self.materialize = (TOPOLOGY["materialize"] if materialize is None
+                            else materialize)
+        self.pfs = UnderlyingPFS(self.ledger, materialize=self.materialize)
         self.clients: Dict[int, BFSClient] = {}
 
     def rpc_fence(self, c: "BFSClient") -> None:
@@ -711,23 +753,32 @@ class BaseFS:
         c.files.pop(h, None)
         return 0
 
-    def bfs_write(self, c: BFSClient, h: int, data: bytes) -> int:
+    def bfs_write(self, c: BFSClient, h: int, data) -> int:
+        """Write ``data`` — real bytes or a lazy :class:`Payload` extent —
+        at the current position into the client's burst buffer."""
         f = c.files[h]
-        buf_start = c._buffer_append(data)
+        payload = as_payload(data)
+        if self.materialize:
+            payload = payload.materialized()
+        buf_start = c._buffer_append(payload)
         kind = EventKind.MEM_WRITE if c.tier == "mem" else EventKind.SSD_WRITE
-        self.ledger.record(kind, c.id, len(data))
-        f.local.record_write(f.pos, f.pos + len(data), buf_start)
-        f.pos += len(data)
+        self.ledger.record(kind, c.id, len(payload))
+        f.local.record_write(f.pos, f.pos + len(payload), buf_start)
+        f.pos += len(payload)
         f.local_eof = max(f.local_eof, f.pos)
-        return len(data)
+        return len(payload)
 
     def bfs_read(self, c: BFSClient, h: int, size: int,
-                 owner: Optional[int]) -> bytes:
+                 owner: Optional[int]) -> Payload:
         """Read ``size`` bytes at the current position from ``owner``'s buffer.
 
         owner None  -> read the underlying PFS directly.
         owner == c.id -> local burst-buffer read.
         otherwise   -> client-to-client transfer (RDMA in the paper).
+
+        Returns a lazy :class:`Payload`: compare it against another
+        payload (symbolic when both carry extent descriptors) or
+        materialize with ``bytes(...)`` when real bytes are needed.
         """
         # Dependency close trigger: the owner being read was resolved from
         # a query answer — the reader's pending query batch must be sent
@@ -752,7 +803,7 @@ class BaseFS:
         parts = []
         for fs_, fe_, bs_ in of.local.buffer_runs(start, end):
             parts.append(oc.buffer_read(bs_, fe_ - fs_))
-        data = b"".join(parts)
+        data = concat(parts)
         if owner == c.id:
             kind = (EventKind.MEM_READ if c.tier == "mem"
                     else EventKind.SSD_READ)

@@ -39,7 +39,7 @@ _SYNC_KINDS = {
 @dataclass
 class _ReadRecord:
     op: Op
-    actual: bytes
+    actual: bytes  # lazy Payload in extent mode; compares/indexes like bytes
 
 
 class TracedRun:

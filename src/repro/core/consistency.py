@@ -24,6 +24,7 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 from repro.core.basefs import SEEK_SET, BaseFS, BFSClient
+from repro.core.extents import Payload, concat
 from repro.core.intervals import Interval, OwnerIntervalMap
 
 
@@ -94,17 +95,19 @@ class _LayeredFS:
 
     # ---- owner-resolved read used by every layer ----
     def _read_resolved(self, fh: FileHandle, size: int,
-                       owners: List[Interval]) -> bytes:
+                       owners: List[Interval]) -> Payload:
         """Read [pos, pos+size) splitting along the owner intervals.
 
         ``owners`` are the attach intervals overlapping the range (possibly
         empty).  Unowned gaps are served by the underlying PFS.  A reader
-        that owns a sub-range serves it from its own buffer.
+        that owns a sub-range serves it from its own buffer.  Returns a
+        lazy :class:`~repro.core.extents.Payload` (sub-reads re-coalesce,
+        so a pattern-written block compares symbolically).
         """
         fs, c, h = self.fs, fh.client, fh.bfs_handle
         start = fs.bfs_tell(c, h)
         end = start + size
-        parts: List[bytes] = []
+        parts: List[Payload] = []
         pos = start
         segs: List[Tuple[int, int, Optional[int]]] = []
         for iv in sorted(owners, key=lambda v: v.start):
@@ -137,7 +140,7 @@ class _LayeredFS:
             fs.bfs_seek(c, h, s, SEEK_SET)
             parts.append(fs.bfs_read(c, h, e - s, owner))
         fs.bfs_seek(c, h, end, SEEK_SET)
-        return b"".join(parts)
+        return concat(parts)
 
 
 class PosixFS(_LayeredFS):
@@ -166,7 +169,7 @@ class PosixFS(_LayeredFS):
         fs.bfs_attach(c, h, pos, len(data))
         return n
 
-    def read(self, fh: FileHandle, size: int) -> bytes:
+    def read(self, fh: FileHandle, size: int) -> Payload:
         fs, c, h = self.fs, fh.client, fh.bfs_handle
         pos = fs.bfs_tell(c, h)
         owners = fs.bfs_query(c, h, pos, size)
@@ -193,7 +196,7 @@ class CommitFS(_LayeredFS):
         self.fs.rpc_fence(fh.client)
         return rc
 
-    def read(self, fh: FileHandle, size: int) -> bytes:
+    def read(self, fh: FileHandle, size: int) -> Payload:
         fs, c, h = self.fs, fh.client, fh.bfs_handle
         pos = fs.bfs_tell(c, h)
         owners = fs.bfs_query(c, h, pos, size)
@@ -232,7 +235,7 @@ class SessionFS(_LayeredFS):
     def write(self, fh: FileHandle, data: bytes) -> int:
         return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
 
-    def read(self, fh: FileHandle, size: int) -> bytes:
+    def read(self, fh: FileHandle, size: int) -> Payload:
         if fh.owner_cache is None:
             # Session never opened: only local writes / PFS are visible.
             owners: List[Interval] = []
@@ -286,7 +289,7 @@ class MPIIOFS(_LayeredFS):
     def write(self, fh: FileHandle, data: bytes) -> int:
         return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
 
-    def read(self, fh: FileHandle, size: int) -> bytes:
+    def read(self, fh: FileHandle, size: int) -> Payload:
         owners: List[Interval] = []
         if fh.owner_cache is not None:
             pos = self.fs.bfs_tell(fh.client, fh.bfs_handle)

@@ -1,6 +1,16 @@
 """Training-data ingestion through the consistency layer (paper §6.3)."""
 
 from repro.data.dlio import PreloadedStore
-from repro.data.pipeline import TokenPipeline, synthetic_batch
 
 __all__ = ["PreloadedStore", "TokenPipeline", "synthetic_batch"]
+
+
+def __getattr__(name):
+    # TokenPipeline/synthetic_batch pull in jax (~300 MB resident): load
+    # them lazily so data-plane benchmarks that only need PreloadedStore
+    # (fig6, benchmarks.perf) keep an honest RSS baseline.
+    if name in ("TokenPipeline", "synthetic_batch"):
+        from repro.data import pipeline
+
+        return getattr(pipeline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -72,11 +72,13 @@ class PreloadedStore:
         self._write_handles: Dict[int, FileHandle] = {}
 
     # ------------------------------------------------------------------
-    def _sample_payload(self, idx: int) -> bytes:
+    def _sample_payload(self, idx: int):
+        """Sample content: real bytes, or a zero-copy pattern extent in
+        synthetic mode (read verification is then a descriptor compare)."""
         if self.samples is not None:
             return self.samples[idx].tobytes()
-        from repro.io.workloads import pattern_bytes
-        return pattern_bytes(idx * self.sample_bytes, self.sample_bytes)
+        from repro.io.workloads import pattern_extent
+        return pattern_extent(idx * self.sample_bytes, self.sample_bytes)
 
     def owner_host(self, idx: int) -> int:
         return idx // self.n_local
@@ -160,4 +162,6 @@ class PreloadedStore:
             self.layer.session_open(fh)
         off = (idx - src * self.n_local) * self.sample_bytes
         self.layer.seek(fh, off)
-        return self.layer.read(fh, self.sample_bytes)
+        # The training pipeline consumes raw bytes: materialize here (the
+        # lazy payload stays symbolic on the benchmark epoch path).
+        return bytes(self.layer.read(fh, self.sample_bytes))

@@ -13,7 +13,10 @@ from repro.io.workloads import (
     cn_w,
     cs_r,
     pattern_bytes,
+    pattern_extent,
     rn_r,
+    rn_r_hot,
+    rn_r_hot_set,
     run_workload,
     sn_w,
 )
@@ -27,7 +30,10 @@ __all__ = [
     "cc_r",
     "cs_r",
     "rn_r",
+    "rn_r_hot",
+    "rn_r_hot_set",
     "pattern_bytes",
+    "pattern_extent",
     "run_workload",
     "SCRConfig",
     "SCRResult",

@@ -27,13 +27,14 @@ application bytes read.
 
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.basefs import BaseFS, EventKind
 from repro.core.consistency import FileHandle, make_fs
 from repro.core.costmodel import CostModel, HardwareConstants, PhaseResult
-from repro.io.workloads import pattern_bytes
+from repro.io.workloads import pattern_extent
 
 #: HACC particle record: 7 float32 + 1 int64 + 1 uint16 (38 bytes).
 HACC_ARRAYS: Tuple[Tuple[str, int], ...] = (
@@ -106,7 +107,9 @@ def _ckpt_path(rank: int) -> str:
 
 
 def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
-            verify: bool = True) -> SCRResult:
+            verify: bool = True,
+            timings: Optional[Dict[str, float]] = None) -> SCRResult:
+    t0 = _time.perf_counter()
     fs = BaseFS()
     layer = make_fs(cfg.model, fs)
     ledger = fs.ledger
@@ -143,7 +146,7 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
         for _name, esz in HACC_ARRAYS:
             nbytes = nper * esz
             layer.seek(fh, off)
-            layer.write(fh, pattern_bytes(off, nbytes))  # -> MEM_WRITE
+            layer.write(fh, pattern_extent(off, nbytes))  # -> MEM_WRITE
             off += nbytes
     ckpt_bytes = 0
     for rank in range(ranks):
@@ -184,7 +187,8 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
             layer.seek(fh, off)
             data = layer.read(fh, nbytes)  # MEM_READ from own buffer
             if verify:
-                assert data == pattern_bytes(off, nbytes), (
+                # Symbolic descriptor compare on the extent plane.
+                assert data == pattern_extent(off, nbytes), (
                     f"restart mismatch rank={rank} array={_name}"
                 )
                 verified += 1
@@ -204,7 +208,13 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
                       cfg.bytes_per_rank, rpc_type="mem", peer=AUX + rank)
 
     fs.drain()  # flush tail send-queue batches so the DES prices them
+    t1 = _time.perf_counter()
     phases = CostModel(hw).replay(ledger)
+    t2 = _time.perf_counter()
+    if timings is not None:
+        timings["exec_s"] = t1 - t0
+        timings["replay_s"] = t2 - t1
+        timings["events"] = len(ledger.events)
     rpcs = {
         t: ledger.count(EventKind.RPC, t)
         for t in ("attach", "query", "detach", "stat")

@@ -17,13 +17,20 @@ Each workload runs on a consistency layer from
 :mod:`repro.core.consistency`; per Table 6 the ONLY difference between the
 runs is the placement of ``attach``/``query`` primitives.  Reads are
 verified against the deterministic write pattern, so every benchmark run
-is also an end-to-end correctness check of the consistency layer.
+is also an end-to-end correctness check of the consistency layer.  On the
+default zero-copy data plane the verification is *symbolic* — the write
+path stores :func:`pattern_extent` descriptors and the read path hands
+them back re-coalesced, so equality is a descriptor compare and no
+payload byte is ever materialized (``--materialize`` restores the
+byte-moving plane with byte-for-byte verification).
 """
 
 from __future__ import annotations
 
 import random as _random
+import time as _time
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict, List, Optional
 
 # TOPOLOGY/set_topology are re-exported for the benchmark drivers.
@@ -31,17 +38,45 @@ from repro.core.basefs import (BaseFS, EventKind,  # noqa: F401
                                TOPOLOGY, set_topology)
 from repro.core.consistency import FileHandle, make_fs
 from repro.core.costmodel import CostModel, HardwareConstants, PhaseResult
+from repro.core.extents import PatternExtent, Payload
 
 SHARED_FILE = "/shared/workload.dat"
 
+#: Memoize fully-expanded patterns up to this size (8 KB and the 116 KB
+#: DL sample both fit; 8 MB expansions stay uncached to bound the cache
+#: at ``256 x 256 KB = 64 MB`` worst-case).
+_PATTERN_CACHE_MAX = 256 * 1024
 
-def pattern_bytes(offset: int, size: int) -> bytes:
-    """Deterministic, offset-addressed fill so any read is verifiable."""
-    # One cheap byte per position; block-structure keeps it fast for 8MB ops.
-    head = (offset * 2654435761) & 0xFF
-    body = bytes(((offset >> 3) + i) & 0xFF for i in range(min(size, 64)))
+
+@lru_cache(maxsize=256)
+def _pattern_template(head: int, body0: int, size: int) -> bytes:
+    """Expand one (head, body-start, size) template."""
+    body = bytes((body0 + i) & 0xFF for i in range(min(size, 64)))
     reps = size // len(body) + 1 if body else 0
     return (bytes([head]) + (body * reps))[:size] if size else b""
+
+
+def pattern_bytes(offset: int, size: int) -> bytes:
+    """Deterministic, offset-addressed fill so any read is verifiable.
+
+    The content depends on ``offset`` only through a (head byte,
+    body-start byte) template, so expansions are memoized per template —
+    read verification in byte mode no longer rebuilds the 64-byte body
+    (nor the full block, for cacheable sizes) on every call.
+    """
+    head = (offset * 2654435761) & 0xFF
+    body0 = (offset >> 3) & 0xFF
+    if size <= _PATTERN_CACHE_MAX:
+        return _pattern_template(head, body0, size)
+    return _pattern_template.__wrapped__(head, body0, size)
+
+
+def pattern_extent(offset: int, size: int) -> PatternExtent:
+    """The symbolic form of :func:`pattern_bytes`: a zero-copy extent
+    descriptor.  Writing and verifying these is the benchmark fast path —
+    a read that round-trips the descriptor compares in O(1) with no byte
+    materialization (see :mod:`repro.core.extents`)."""
+    return PatternExtent(pattern_bytes, offset, size)
 
 
 @dataclass(frozen=True)
@@ -61,6 +96,7 @@ class WorkloadConfig:
     seed: int = 0                   # for random/hot read assignment
     hot_frac: float = 0.0           # "hot" pattern: P(access in hot region)
     hot_blocks: int = 0             # "hot" pattern: hot region, in blocks
+    hot_stride: int = 1             # "hot" pattern: blocks between hot blocks
     pfs_drain: bool = False         # flush buffers to the PFS in-phase
     tier: str = "ssd"               # burst-buffer tier: ssd | mem (SCR)
 
@@ -118,6 +154,24 @@ def rn_r_hot(n: int, s: int, model: str, p: int = 12, m: int = 10,
     return WorkloadConfig(
         f"RN-R-hot/{model}", model, "contig", "hot", n // 2, n // 2, p, m,
         m, s, seed, hot_frac=hot_frac, hot_blocks=hot_blocks, tier="mem"
+    )
+
+
+def rn_r_hot_set(n: int, s: int, model: str, p: int = 12, m: int = 10,
+                 seed: int = 0, hot_frac: float = 0.9,
+                 hot_blocks: int = 16, hot_stride: int = 8) -> WorkloadConfig:
+    """Non-contiguous hot SET: the hot blocks sit ``hot_stride`` blocks
+    apart instead of forming one head region.  With ``hot_stride`` a
+    multiple of the shard count, once the adaptive router shrinks the
+    stripe width to the access size every hot stripe index is congruent
+    mod ``num_shards`` — the whole hot set collides on ONE shard, and
+    only the rebalancer's override/move path can spread it again (the
+    fig8 workload that exercises that path; under the static 64 KiB
+    stripes the same set is spread round-robin and needs no help)."""
+    return WorkloadConfig(
+        f"RN-R-hotset/{model}", model, "contig", "hot", n // 2, n // 2, p,
+        m, m, s, seed, hot_frac=hot_frac, hot_blocks=hot_blocks,
+        hot_stride=hot_stride, tier="mem"
     )
 
 
@@ -179,11 +233,16 @@ def _read_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
     if cfg.read_pattern == "hot":
         total = cfg.writers * cfg.m_w
         hot = max(1, min(cfg.hot_blocks, total))
+        # hot_stride spaces the hot blocks ``stride`` blocks apart (a
+        # NON-contiguous hot set; stride 1 = the contiguous head region).
+        stride = max(1, cfg.hot_stride)
+        while stride > 1 and (hot - 1) * stride >= total:
+            stride //= 2  # clamp the hot set into the written file
         # Integer-combined seed: deterministic across processes (tuple
         # seeding would go through hash()).
         rng = _random.Random(cfg.seed * 1_000_003 + rank)
         return [
-            (rng.randrange(hot) if rng.random() < cfg.hot_frac
+            (rng.randrange(hot) * stride if rng.random() < cfg.hot_frac
              else rng.randrange(total)) * cfg.s
             for _ in range(cfg.m_r)
         ]
@@ -195,18 +254,28 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  verify: bool = True, shards: Optional[int] = None,
                  batch: Optional[int] = None,
                  linger: Optional[float] = None,
-                 adaptive: Optional[bool] = None) -> WorkloadResult:
+                 adaptive: Optional[bool] = None,
+                 materialize: Optional[bool] = None,
+                 timings: Optional[Dict[str, float]] = None
+                 ) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
     per call unless the caller passes one in.  ``shards``/``batch``/
-    ``linger``/``adaptive`` override the process-wide :data:`TOPOLOGY`
-    defaults for that fresh BaseFS (ignored when ``fs`` is supplied);
-    ``None`` already means "use TOPOLOGY" inside ``BaseFS``.
+    ``linger``/``adaptive``/``materialize`` override the process-wide
+    :data:`TOPOLOGY` defaults for that fresh BaseFS (ignored when ``fs``
+    is supplied); ``None`` already means "use TOPOLOGY" inside ``BaseFS``.
+
+    Writes carry :func:`pattern_extent` descriptors and reads are
+    verified symbolically against them — zero byte materialization on
+    the default (extent) data plane, real byte round-trips under
+    ``materialize=True``.  ``timings``, if given, receives ``exec_s``
+    (BaseFS execution), ``replay_s`` (DES pricing) and ``events``.
     """
+    t0 = _time.perf_counter()
     if fs is None:
         fs = BaseFS(num_shards=shards, batch=batch, linger=linger,
-                    adaptive=adaptive)
+                    adaptive=adaptive, materialize=materialize)
     layer = make_fs(cfg.model, fs)
     ledger = fs.ledger
 
@@ -234,7 +303,7 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                 fh = handles[rank]
                 off = offsets[rank][j]
                 layer.seek(fh, off)
-                layer.write(fh, pattern_bytes(off, cfg.s))
+                layer.write(fh, pattern_extent(off, cfg.s))
         for rank in range(cfg.writers):
             fh = handles[rank]
             if cfg.model == "commit":
@@ -275,7 +344,9 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                 layer.seek(fh, off)
                 data = layer.read(fh, cfg.s)
                 if verify:
-                    assert data == pattern_bytes(off, cfg.s), (
+                    # Symbolic on the extent plane (descriptor compare,
+                    # no materialization); byte compare in byte mode.
+                    assert data == pattern_extent(off, cfg.s), (
                         f"{cfg.name}: read mismatch at offset {off}"
                     )
                     verified += 1
@@ -284,7 +355,13 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                 layer.session_close(rhandles[r])
 
     fs.drain()  # flush tail send-queue batches so the DES prices them
+    t1 = _time.perf_counter()
     phases = CostModel(hw).replay(ledger)
+    t2 = _time.perf_counter()
+    if timings is not None:
+        timings["exec_s"] = t1 - t0
+        timings["replay_s"] = t2 - t1
+        timings["events"] = len(ledger.events)
     rpc_counts = {
         t: ledger.count(EventKind.RPC, t)
         for t in ("attach", "query", "detach", "stat", "migrate")

@@ -1,0 +1,264 @@
+"""Zero-copy extent data plane (PR 4).
+
+* payload semantics: slicing, equality (symbolic AND content fallback),
+  concat re-coalescing, the extent log and the PFS extent file;
+* golden-ledger regression: seeded runs on the extent plane vs the
+  retained byte-moving fallback (``BaseFS(materialize=True)``) produce
+  event-for-event identical ledgers and identical DES times across all
+  four consistency models;
+* pattern_bytes memoization (satellite): template-cached expansion is
+  byte-identical to the direct formula;
+* incremental ledger counters (satellite): O(1) count/total_bytes agree
+  with a full scan;
+* fig8 hot-set satellite: the strided hot set drives the adaptive
+  router through the override/move path.
+"""
+
+import pytest
+
+from repro.core.basefs import BaseFS, EventKind
+from repro.core.extents import (
+    ByteSlab,
+    Chain,
+    ExtentFile,
+    ExtentLog,
+    PatternExtent,
+    ZeroExtent,
+    as_payload,
+    concat,
+)
+from repro.core.costmodel import CostModel
+from repro.io.workloads import (
+    cc_r,
+    ckpt_w,
+    pattern_bytes,
+    pattern_extent,
+    rn_r_hot_set,
+    run_workload,
+)
+
+
+def _gen(offset: int, size: int) -> bytes:
+    return bytes((offset + i * 7) & 0xFF for i in range(size))
+
+
+class TestPayloadSemantics:
+    def test_byteslab_roundtrip_and_zero_copy_slice(self):
+        raw = b"0123456789"
+        p = ByteSlab(raw)
+        assert len(p) == 10 and p.to_bytes() is raw
+        s = p.slice(2, 5)
+        assert s.to_bytes() == b"23456"
+        assert s.data is raw  # a view, not a copy
+
+    def test_pattern_extent_matches_generator(self):
+        p = PatternExtent(_gen, 100, 64)
+        assert p.to_bytes() == _gen(100, 64)
+
+    def test_pattern_slice_is_window_not_readdress(self):
+        # The generator is NOT shift-invariant: slicing must narrow the
+        # window over the SAME gen(offset, size) call.
+        p = PatternExtent(pattern_bytes, 4096, 256)
+        assert p.slice(3, 50).to_bytes() == pattern_bytes(4096, 256)[3:53]
+
+    def test_symbolic_equality_no_materialization(self):
+        calls = []
+
+        def gen(offset, size):
+            calls.append((offset, size))
+            return bytes(size)
+
+        a = PatternExtent(gen, 0, 1 << 30)  # 1 GiB, never expanded
+        b = PatternExtent(gen, 0, 1 << 30)
+        assert a == b
+        assert calls == []
+
+    def test_content_fallback_equality(self):
+        p = PatternExtent(_gen, 5, 32)
+        assert p == _gen(5, 32)
+        assert _gen(5, 32) == p  # reflected
+        assert p != _gen(6, 32)
+        assert ZeroExtent(4) == b"\0\0\0\0"
+        assert ZeroExtent(4) != b"\0\0\0\1"
+        assert ZeroExtent(4) != b"\0\0\0"  # length mismatch
+
+    def test_concat_recoalesces_split_extent(self):
+        p = PatternExtent(_gen, 9, 100)
+        halves = [p.slice(0, 37), p.slice(37, 63)]
+        merged = concat(halves)
+        assert isinstance(merged, PatternExtent)
+        assert merged == p  # symbolic again after the round trip
+
+    def test_concat_heterogeneous_chain(self):
+        c = concat([ByteSlab(b"ab"), ZeroExtent(3), ZeroExtent(2)])
+        assert isinstance(c, Chain)
+        assert c.to_bytes() == b"ab\0\0\0\0\0"
+        assert c.slice(1, 4).to_bytes() == b"b\0\0\0"
+        assert c[1:5] == b"b\0\0\0"
+        assert c[0] == ord("a")
+
+    def test_as_payload(self):
+        assert isinstance(as_payload(b"xy"), ByteSlab)
+        assert isinstance(as_payload(bytearray(b"xy")), ByteSlab)
+        p = ZeroExtent(1)
+        assert as_payload(p) is p
+        with pytest.raises(TypeError):
+            as_payload(123)
+
+    def test_extent_log(self):
+        log = ExtentLog()
+        assert log.append(ByteSlab(b"abcd")) == 0
+        assert log.append(PatternExtent(_gen, 0, 6)) == 4
+        assert len(log) == 10
+        assert log.read(0, 4) == b"abcd"
+        assert log.read(2, 5).to_bytes() == b"cd" + _gen(0, 6)[:3]
+        with pytest.raises(ValueError):
+            log.read(8, 4)  # past end
+
+    def test_extent_file_overwrite_and_zero_fill(self):
+        f = ExtentFile()
+        f.write(4, ByteSlab(b"AAAA"))
+        f.write(6, ByteSlab(b"bb"))
+        assert f.size == 8
+        assert f.read(0, 10).to_bytes() == b"\0\0\0\0AAbb\0\0"
+        # Overwrite in the middle splits the loser's payload window.
+        f.write(5, ByteSlab(b"x"))
+        assert f.read(4, 4).to_bytes() == b"Axbb"
+        assert f.read(6, 6).to_bytes() == b"bb\0\0\0\0"  # past EOF zeros
+
+
+class TestGoldenLedgerExtentVsByte:
+    """Seeded runs: extent mode vs the byte-mode fallback are
+    ledger-identical and DES-identical (the tentpole's safety net)."""
+
+    MODELS = ("posix", "commit", "session", "mpiio")
+
+    @staticmethod
+    def _events(ledger):
+        return [
+            (e.kind.value, e.client, e.nbytes, e.rpc_type, e.peer, e.seq,
+             e.rpc_ranges, e.shard, e.rpc_calls, e.flush, e.linger, e.deps,
+             e.opened_after, e.last_after, e.forced_after)
+            for e in ledger.events
+        ]
+
+    @pytest.mark.parametrize("model", MODELS)
+    def test_ledgers_and_des_identical(self, model):
+        cfg = cc_r(2, 8 * 1024, model, p=3, m=4)
+        results = {}
+        for materialize in (False, True):
+            res = run_workload(cfg, materialize=materialize)
+            results[materialize] = res
+        ext, mat = results[False], results[True]
+        assert [p.name for p in ext.phases] == [p.name for p in mat.phases]
+        for pe, pm in zip(ext.phases, mat.phases):
+            assert pe.duration == pm.duration  # identical DES times
+            assert pe.bytes_by_kind == pm.bytes_by_kind
+        assert ext.rpc_counts == mat.rpc_counts
+        assert ext.verified_reads == mat.verified_reads
+
+    @pytest.mark.parametrize("model", MODELS)
+    def test_event_for_event(self, model):
+        cfg = ckpt_w(2, 8 * 1024, model, p=2, m=3)
+        ledgers = {}
+        for materialize in (False, True):
+            fs = BaseFS(batch=4, materialize=materialize)
+            run_workload(cfg, fs=fs)
+            ledgers[materialize] = self._events(fs.ledger)
+        assert ledgers[False] == ledgers[True]
+
+    def test_byte_mode_materializes_same_content(self):
+        # The byte plane must store the SAME bytes the extent plane
+        # describes: cross-check one full read in both modes.
+        cfg = cc_r(2, 512, "commit", p=2, m=2)
+        for materialize in (False, True):
+            res = run_workload(cfg, materialize=materialize)
+            assert res.verified_reads == cfg.readers * cfg.m_r
+
+
+class TestPatternMemoization:
+    def test_template_cache_matches_formula(self):
+        for offset, size in ((0, 0), (0, 1), (8192, 64), (12345, 100),
+                             (8 * 1024 * 1024, 300 * 1024)):
+            head = (offset * 2654435761) & 0xFF
+            body = bytes(((offset >> 3) + i) & 0xFF
+                         for i in range(min(size, 64)))
+            reps = size // len(body) + 1 if body else 0
+            want = (bytes([head]) + body * reps)[:size] if size else b""
+            assert pattern_bytes(offset, size) == want
+
+    def test_cacheable_sizes_return_same_object(self):
+        a = pattern_bytes(8192, 8192)
+        b = pattern_bytes(8192, 8192)
+        assert a is b  # memoized expansion
+
+    def test_pattern_extent_wraps_pattern_bytes(self):
+        p = pattern_extent(64, 128)
+        assert p.gen is pattern_bytes
+        assert p.to_bytes() == pattern_bytes(64, 128)
+
+
+class TestLedgerCounters:
+    def test_incremental_counters_match_scan(self):
+        fs = BaseFS()
+        c = fs.client(0)
+        h = fs.bfs_open(c, "/f")
+        fs.bfs_write(c, h, b"x" * 100)
+        fs.bfs_attach_file(c, h)
+        fs.bfs_query(c, h, 0, 50)
+        fs.ledger.mark_phase("p")
+        led = fs.ledger
+        for kind in EventKind:
+            assert led.count(kind) == sum(
+                1 for e in led.events if e.kind is kind)
+            assert led.total_bytes(kind) == sum(
+                e.nbytes for e in led.events if e.kind is kind)
+        assert led.count(EventKind.RPC, "attach") == 1
+        assert led.count(EventKind.RPC, "query") == 1
+        assert led.count(EventKind.RPC, "detach") == 0
+        led.clear()
+        assert led.count(EventKind.RPC) == 0
+        assert led.total_bytes(EventKind.SSD_WRITE) == 0
+
+
+class TestHotSetOverridePath:
+    def test_strided_hot_set_engages_rebalancer_overrides(self):
+        # 8 KB accesses shrink the adaptive stripe to 8 KiB; the hot
+        # blocks sit 8 blocks apart, so every hot stripe index is
+        # congruent mod 8 and the set collides on ONE shard — the
+        # rebalancer must answer with explicit overrides + migrations.
+        cfg = rn_r_hot_set(8, 8 * 1024, "commit", p=16, m=10, seed=0,
+                           hot_frac=0.9, hot_blocks=16, hot_stride=8)
+        fs = BaseFS(num_shards=8, adaptive=True)
+        res = run_workload(cfg, fs=fs)
+        router = fs.server.router
+        assert router._overrides, "override/move path was not exercised"
+        assert res.rpc_counts["migrate"] > 0
+        # The overrides must actually SPREAD the hot stripes: every
+        # override target must differ from the stripe's crc32 home shard
+        # (an override back onto the colliding shard would be a no-op).
+        import zlib
+        for (path, idx), target in router._overrides.items():
+            home = (zlib.crc32(path.encode()) + idx) % router.num_shards
+            assert target != home
+
+    def test_hot_stride_default_is_backward_compatible(self):
+        from repro.io.workloads import rn_r_hot, _read_offsets
+        cfg = rn_r_hot(4, 8 * 1024, "commit", p=4, m=8, seed=3)
+        assert cfg.hot_stride == 1
+        offs = _read_offsets(cfg, 0)
+        hot = max(1, min(cfg.hot_blocks, cfg.writers * cfg.m_w))
+        assert all(o % cfg.s == 0 for o in offs)
+        assert any(o // cfg.s < hot for o in offs)
+
+
+class TestDESReplayIdenticalAcrossPlanes:
+    def test_phase_durations_bitwise_equal(self):
+        cfg = cc_r(2, 8 * 1024, "session", p=2, m=3)
+        durations = {}
+        for materialize in (False, True):
+            fs = BaseFS(materialize=materialize)
+            run_workload(cfg, fs=fs)
+            phases = CostModel().replay(fs.ledger)
+            durations[materialize] = [(p.name, p.duration) for p in phases]
+        assert durations[False] == durations[True]
