@@ -6,8 +6,13 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # `ruff format <file>` and add it here; once the list covers the tree,
 # replace it with the bare directories.  (`ruff check` already runs
 # repo-wide — only the formatter is ratcheted.)  PR 4 enlisted its new
-# modules; the legacy modules it touched keep the 79-column paper style
-# until a formatter run can verify them.
+# modules; the legacy modules touched since keep the 79-column paper
+# style until a formatter run can VERIFY them — neither ruff nor any
+# other formatter is installed in the dev container, so enlisting
+# hand-formatted files would put unverifiable entries behind the
+# blocking CI gate.  The format step below degrades gracefully when
+# `ruff format` is unavailable (notice + skip) instead of failing the
+# whole lint target, so `make lint` stays usable in-container.
 FMT_PATHS := benchmarks/__init__.py \
 	benchmarks/perf.py \
 	src/repro/core/extents.py
@@ -24,9 +29,23 @@ test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
 # Lint gate (same invocation as the CI `lint` job; see ruff.toml).
+# In-container neither ruff nor any formatter is installed: each step
+# probes its tool and skips with a notice instead of failing, so
+# `make lint` stays usable locally while CI (which installs ruff)
+# still enforces both steps.
 lint:
-	$(RUFF) check src benchmarks tests examples
-	$(RUFF) format --check $(FMT_PATHS)
+	@if command -v $(RUFF) >/dev/null 2>&1; then \
+		$(RUFF) check src benchmarks tests examples; \
+	else \
+		echo "notice: '$(RUFF)' unavailable in this environment;" \
+		     "skipping ruff check (CI enforces it)"; \
+	fi
+	@if $(RUFF) format --help >/dev/null 2>&1; then \
+		$(RUFF) format --check $(FMT_PATHS); \
+	else \
+		echo "notice: 'ruff format' unavailable in this environment;" \
+		     "skipping the format ratchet ($(words $(FMT_PATHS)) files)"; \
+	fi
 
 bench:
 	$(PYTHON) -m benchmarks.run --fast
@@ -41,8 +60,10 @@ bench-fig8:
 bench-smoke:
 	$(PYTHON) -m pytest -x -q tests/test_bench_smoke.py
 
-# Wall-clock / peak-RSS harness (BENCH_pr4.json): fast grid, both data
-# planes (extent vs byte-moving materialize).
+# Wall-clock / peak-RSS harness (BENCH_pr5.json): fast grid, both data
+# planes (extent vs byte-moving materialize).  BENCH_pr4.json is the
+# frozen PR-4 capture; the PR-5 hot-path before/after lives under
+# hotpath_pr5 in BENCH_pr5.json.
 perf:
 	$(PYTHON) -m benchmarks.perf --grid fast
 

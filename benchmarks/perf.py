@@ -11,9 +11,13 @@ RSS — on both data planes:
   (``BaseFS(materialize=True)``), the pre-PR-4 behaviour.
 
 Each (figure, mode) measurement runs in its OWN subprocess so
-``ru_maxrss`` is attributable; results merge into ``BENCH_pr4.json`` at
-the repo root — the before/after record for the data-plane refactor and
-the baseline for future perf PRs.
+``ru_maxrss`` is attributable; results merge into ``BENCH_pr5.json`` at
+the repo root — the perf trajectory record (``BENCH_pr4.json`` is the
+frozen PR-4 capture).  The ``hotpath_pr5`` section records the PR-5
+Python-level hot-path fixes on the fig7 full-grid point (2048 clients):
+memoized random-read deal (one shuffle per config instead of one per
+reader), single-windowed-splice ``OwnerIntervalMap.attach_many``, and
+the batcher's interned per-file key tuples.
 
     PYTHONPATH=src python -m benchmarks.perf [--grid fast|full]
         [--figs fig3,...] [--modes extent,materialize] [--out PATH]
@@ -43,7 +47,7 @@ from repro.io.scr import SCRConfig, run_scr
 from repro.io.workloads import cc_r, cn_w, rn_r, rn_r_hot, run_workload, set_topology
 
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
-OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr4.json"))
+OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr5.json"))
 MODES = ("extent", "materialize")
 
 
@@ -208,11 +212,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     if os.path.exists(args.out):
         with open(args.out) as f:
             doc = json.load(f)
-    doc.setdefault("pr", 4)
+    doc.setdefault("pr", 5)
     doc.setdefault(
         "note",
         "Wall-clock + peak-RSS per figure, extent (zero-copy) vs "
-        "materialize (byte-moving) data plane; see benchmarks/perf.py.",
+        "materialize (byte-moving) data plane; hotpath_pr5 records the "
+        "PR-5 BaseFS-execution hot-path fixes; see benchmarks/perf.py.",
     )
     # Merge per figure: a partial --figs/--modes run refreshes only the
     # figures it measured, never discarding the rest of the record.

@@ -12,14 +12,15 @@ tests of the consistency layers as much as performance measurements.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig7]
                                             [--shards N] [--batch N]
-                                            [--linger USEC] [--stripe BYTES]
+                                            [--linger USEC] [--ack-window N]
+                                            [--stripe BYTES]
                                             [--adaptive] [--materialize]
                                             [--seed N]
 
-``--shards``/``--batch``/``--linger``/``--stripe``/``--adaptive`` set
-the deployment topology for figs 3-6 (fig7 sweeps shard counts and the
-send-queue linger itself but honours ``--batch``; fig8 sweeps routing
-itself).  ``--materialize`` selects the byte-moving data plane (real
+``--shards``/``--batch``/``--linger``/``--ack-window``/``--stripe``/
+``--adaptive`` set the deployment topology for figs 3-6 (fig7 sweeps
+shard counts, the send-queue linger and the ack window itself but
+honours ``--batch``; fig8 sweeps routing itself).  ``--materialize`` selects the byte-moving data plane (real
 bytes, byte-for-byte verification) instead of the default zero-copy
 extent plane — the ledgers and DES results are identical by
 construction, only RAM/wall-clock differ.  ``--seed`` re-seeds the
@@ -57,7 +58,8 @@ FIGS = {
     "fig7": (fig7_shard, "Fig 7: sharded metadata server + RPC batching "
              "(RN-R 8KB)",
              ("workload", "clients", "shards", "batch", "linger_us",
-              "model", "read_bw", "rpc_query", "verified")),
+              "ack_window", "model", "read_bw", "rpc_query", "rpc_msgs",
+              "verified")),
     "fig8": (fig8_hot, "Fig 8: hot-region skewed reads vs adaptive "
              "routing (RN-R-hot 8KB)",
              ("workload", "clients", "shards", "routing", "model",
@@ -79,6 +81,10 @@ def main(argv=None) -> int:
     ap.add_argument("--linger", type=float, default=None,
                     help="send-queue coalescing window in MICROSECONDS "
                          "(0 = send-immediate; default 50)")
+    ap.add_argument("--ack-window", type=int, default=None,
+                    help="unacked fire-and-forget attach flushes a "
+                         "client chain may run ahead of (0 = every "
+                         "flush blocks on its round trip; default 0)")
     ap.add_argument("--stripe", type=int, default=None,
                     help="metadata stripe width in bytes (default 64KiB)")
     ap.add_argument("--adaptive", action="store_true", default=None,
@@ -103,7 +109,7 @@ def main(argv=None) -> int:
         shards=args.shards, batch=args.batch,
         linger=None if args.linger is None else args.linger * 1e-6,
         stripe=args.stripe, adaptive=args.adaptive,
-        materialize=args.materialize,
+        materialize=args.materialize, ack_window=args.ack_window,
     )
 
     all_pass = True

@@ -87,6 +87,14 @@ class Event:
     # floor of the forced close, since the producer's own chain position
     # says nothing about when the consumer asked.  -1 = self-forced.
     forced_after: int = -1
+    # Per-member virtual-clock anchors of a flushed batch: one
+    # ``(anchor_seq, nranges)`` pair per coalesced client call, in
+    # enqueue order (``anchor_seq`` is the same-client ledger seq of the
+    # most recent event when that member was enqueued; -1 = none).  The
+    # DES uses these to RE-SPLIT the batch at linger-timer expiries that
+    # fired before later members were issued — batch *membership* is
+    # time-driven, not ledger-order-driven.  Empty for unqueued traffic.
+    members: Tuple[Tuple[int, int], ...] = ()
 
 
 class EventLedger:
@@ -107,6 +115,10 @@ class EventLedger:
         self.client_node: Dict[int, int] = {}  # client id -> node id
         self.on_barrier: List[Callable[[], None]] = []
         self.pre_record: List[Callable[[EventKind, int], None]] = []
+        # Deployment ack window (``BaseFS(ack_window=K)``): the DES reads
+        # it as the default for ``CostModel.replay(ack_window=)``.  0 =
+        # every flushed batch blocks the issuing chain on its round trip.
+        self.ack_window: int = 0
         # Per-client seq of the most recently appended event; the send
         # queues use it to stamp virtual-clock anchors on flushed batches.
         self.last_seq: Dict[int, int] = {}
@@ -122,14 +134,15 @@ class EventLedger:
                shard: int = 0, rpc_calls: int = 1, flush: str = "",
                linger: float = 0.0, deps: Tuple[int, ...] = (),
                opened_after: int = -1, last_after: int = -1,
-               forced_after: int = -1) -> None:
+               forced_after: int = -1,
+               members: Tuple[Tuple[int, int], ...] = ()) -> None:
         for hook in self.pre_record:
             hook(kind, client)
         seq = next(self._seq)
         self.events.append(
             Event(kind, client, nbytes, rpc_type, peer, seq,
                   rpc_ranges, shard, rpc_calls, flush, linger, deps,
-                  opened_after, last_after, forced_after)
+                  opened_after, last_after, forced_after, members)
         )
         self.last_seq[client] = seq
         key = (kind, rpc_type)
@@ -227,15 +240,30 @@ FLUSH_BARRIER = "barrier"  # global phase barrier
 FLUSH_LINGER = "linger"    # zero-linger queue: intervening client activity
 FLUSH_CLOSE = "close"      # deployment drain (end of measured run)
 
-#: Close reasons whose real force time is EXTERNAL to the issuing
-#: client's control flow AND carries no per-event clock anchor: the DES
-#: prices their departure on the queue's own timer (``t_open + linger``)
-#: — a barrier/drain is global, so the producer's chain position at the
-#: flush's ledger slot says nothing about when the close really
-#: happened.  (Cross-client ``dep`` flushes are external too, but they
-#: carry the forcing client's clock in ``Event.forced_after``; every
-#: other reason is forced at the producer's own chain position.)
+#: Close reasons forced by a GLOBAL event (phase barrier / deployment
+#: drain) rather than by the issuing client's own control flow.  Ledger
+#: semantics documentation only — since PR 5 the DES no longer takes a
+#: distinct pricing path for these: the flush's ledger slot sits
+#: exactly where the client entered the barrier/drain, so its chain
+#: position IS the barrier-entry clock and the ordinary self-forced
+#: formula prices it (capped by the queue's timer; PR 3's raw-timer
+#: stand-in overheld large-linger tail batches, regression-tested).
 TIMER_FORCED = (FLUSH_BARRIER, FLUSH_CLOSE)
+
+#: Flush classes the ack-window model treats as SYNCHRONIZATION points:
+#: the issuing chain waits for every outstanding fire-and-forget attach
+#: ack (plus this flush's own round trip).  Everything else on an attach
+#: queue — size/switch/linger/barrier closes and consumer-forced dep
+#: flushes — is fire-and-forget under ``ack_window > 0``; consumer-side
+#: ``Event.deps`` edges remain the cross-client correctness backstop.
+SYNC_FLUSH = (FLUSH_FENCE, FLUSH_CLOSE)
+
+#: rpc_type of the client-side sync marker recorded when a consistency
+#: fence finds an EMPTY send queue but fire-and-forget attach flushes
+#: are still unacked: the DES drains the client's ack window there.  No
+#: server traffic — the marker carries no payload and costs no
+#: master/worker occupancy.
+RPC_FENCE_MARKER = "fence"
 
 #: Default coalescing window when batching is enabled (seconds).
 DEFAULT_LINGER = 50e-6
@@ -255,6 +283,9 @@ class _SendQueue:
     last_after: int = -1
     # Producer edges accumulated by consumer RPCs coalesced in here.
     deps: List[int] = field(default_factory=list)
+    # One (anchor_seq, nranges) pair per coalesced call, in enqueue
+    # order — the DES re-splits the batch at timer expiries from these.
+    members: List[Tuple[int, int]] = field(default_factory=list)
 
 
 class RPCBatcher:
@@ -284,12 +315,20 @@ class RPCBatcher:
 
     Because the flush event is appended at flush time, a coalesced member
     can never appear in the ledger before data events it logically
-    follows.  The flush *timestamp*, however, is derived by the DES from
-    the queue's virtual clock: each batch event carries anchors for when
-    the queue opened and when its last member was enqueued, and the DES
-    sends it at ``max(last_member, min(forced_close, open + linger))`` —
-    so a linger expiry fires mid-phase (the RPC overlaps subsequent
-    client work) instead of being priced at the next fence or barrier.
+    follows.  The flush *timestamp* — and, since PR 5, the batch
+    *membership* — is derived by the DES from the queue's virtual clock:
+    each batch event carries per-member anchors (``Event.members``), and
+    where the linger timer expired strictly before a later member was
+    issued the DES RE-SPLITS the batch there — the expired prefix
+    departs at its own ``max(last_member, min(forced_close, open +
+    linger))`` and the members after the split open a new sub-batch with
+    its own window — instead of shipping the ledger-order batch whole.
+    A linger expiry therefore fires mid-phase (the RPC overlaps
+    subsequent client work) instead of being priced at the next fence or
+    barrier.  With ``ack_window=K > 0`` flushed attach batches are
+    fire-and-forget: the issuing chain streams past the flush slot and
+    stalls only when K flushes are unacked or a sync point (fence,
+    drain, any dependent/blocking RPC) forces synchronization.
     Consumer RPCs additionally carry ``deps`` edges on the producer
     flushes they observe (see :meth:`dep_flush_attaches`).  Metadata
     *content* is still applied eagerly at call time (correctness is
@@ -299,13 +338,31 @@ class RPCBatcher:
     BATCHABLE = ("attach", "query")
 
     def __init__(self, ledger: EventLedger, max_ranges: int = 0,
-                 linger: Optional[float] = None) -> None:
+                 linger: Optional[float] = None,
+                 ack_window: int = 0) -> None:
         self.ledger = ledger
         self.max_ranges = max_ranges
         self.linger = DEFAULT_LINGER if linger is None else float(linger)
+        self.ack_window = max(0, ack_window)
         self._open: Dict[int, _SendQueue] = {}
-        ledger.on_barrier.append(lambda: self.flush_all(FLUSH_BARRIER))
+        # Per-client count of fire-and-forget attach flushes since the
+        # client's last synchronization point — nonzero means a fence on
+        # an EMPTY queue still needs a sync marker so the DES drains the
+        # ack window (content was applied eagerly; only timing is owed).
+        self._unsynced: Dict[int, int] = {}
+        # Interned (type, path, shard) keys: the streaming hot path
+        # re-submits the same key thousands of times per client, and the
+        # interned tuple makes the queue-key comparison an identity hit.
+        self._keys: Dict[Tuple[str, str, int], Tuple[str, str, int]] = {}
+        ledger.on_barrier.append(self._on_barrier)
         ledger.pre_record.append(self._on_client_activity)
+
+    def _on_barrier(self) -> None:
+        self.flush_all(FLUSH_BARRIER)
+        # A global barrier quiesces the RPC plane: the DES drains every
+        # client's outstanding acks into the phase end, so nothing stays
+        # unsynced across it.
+        self._unsynced.clear()
 
     @property
     def enabled(self) -> bool:
@@ -337,8 +394,18 @@ class RPCBatcher:
             rpc_ranges=q.nranges, shard=shard, rpc_calls=q.calls,
             flush=reason, linger=self.linger, deps=tuple(q.deps),
             opened_after=q.opened_after, last_after=q.last_after,
-            forced_after=forced_after,
+            forced_after=forced_after, members=tuple(q.members),
         )
+        if self.ack_window > 0:
+            if rpc_type == "attach" and reason not in SYNC_FLUSH:
+                # Fire-and-forget: the ack may still be outstanding when
+                # the next fence arrives.
+                self._unsynced[client] = self._unsynced.get(client, 0) + 1
+            else:
+                # Query flushes (a dependent read consumes the answer),
+                # fences and drain closes synchronize the client in the
+                # DES — everything before them is acked.
+                self._unsynced.pop(client, None)
         return self.ledger.events[-1].seq
 
     def flush_all(self, reason: str) -> None:
@@ -346,8 +413,19 @@ class RPCBatcher:
             self.flush(client, reason)
 
     def fence(self, client: int) -> None:
-        """Close the client's open batch (consistency-layer sync point)."""
-        self.flush(client, FLUSH_FENCE)
+        """Close the client's open batch (consistency-layer sync point).
+
+        Under a nonzero ack window a fence must synchronize even when the
+        send queue is EMPTY: earlier fire-and-forget attach flushes may
+        still be unacked, and the consistency model's fence (commit,
+        session_close, MPI file_sync, file close) does not return until
+        they are.  A zero-cost sync marker is recorded for the DES then.
+        """
+        flushed = self.flush(client, FLUSH_FENCE)
+        if (self.ack_window > 0 and flushed is None
+                and self._unsynced.pop(client, None)):
+            self.ledger.record(EventKind.RPC, client, 0,
+                               rpc_type=RPC_FENCE_MARKER)
 
     def dep_flush_query(self, client: int) -> Optional[int]:
         """A read is about to consume the client's pending query answer."""
@@ -398,10 +476,17 @@ class RPCBatcher:
             self.ledger.record(EventKind.RPC, client, nbytes,
                                rpc_type=rpc_type, rpc_ranges=nranges,
                                shard=shard, deps=deps)
+            # An unqueued RPC blocks the chain on its round trip, which
+            # the DES treats as a sync point draining the ack window.
+            self._unsynced.pop(client, None)
             return
-        key = (rpc_type, path, shard)
+        raw = (rpc_type, path, shard)
+        key = self._keys.get(raw)
+        if key is None:
+            key = self._keys.setdefault(raw, raw)
         q = self._open.get(client)
-        if q is not None and q.key != key:
+        # Keys are interned above, so identity IS equality here.
+        if q is not None and q.key is not key:
             self.flush(client, FLUSH_SWITCH)
             q = None
         if q is not None and q.nranges + nranges > self.max_ranges:
@@ -415,6 +500,7 @@ class RPCBatcher:
         q.nranges += nranges
         q.calls += 1
         q.last_after = self.ledger.last_seq.get(client, -1)
+        q.members.append((q.last_after, nranges))
         for d in deps:
             if d not in q.deps:
                 q.deps.append(d)
@@ -463,7 +549,7 @@ class GlobalServer:
     def __init__(self, ledger: EventLedger, num_workers: int = 23,
                  num_shards: int = 1, stripe: int = DEFAULT_STRIPE,
                  batch: int = 0, linger: Optional[float] = None,
-                 adaptive: bool = False) -> None:
+                 adaptive: bool = False, ack_window: int = 0) -> None:
         # Catalyst nodes have 24 cores: 1 master + 23 workers (per shard).
         self.ledger = ledger
         self.num_workers = num_workers
@@ -471,7 +557,8 @@ class GlobalServer:
         self.stripe = stripe
         self.router: StaticRouter = make_router(num_shards, stripe, adaptive)
         self.shards = [_ServerShard() for _ in range(self.num_shards)]
-        self.batcher = RPCBatcher(ledger, batch, linger)
+        self.batcher = RPCBatcher(ledger, batch, linger,
+                                  ack_window=ack_window)
 
     # ---- routing ------------------------------------------------------
     def _split_runs(
@@ -508,9 +595,7 @@ class GlobalServer:
         for iv in ivs:
             for k, pieces in self.router.split_runs(
                     path, [(iv.start, iv.end)]).items():
-                tree = self.shards[k].tree(path)
-                for start, end in pieces:
-                    tree.attach(start, end, iv.value)
+                self.shards[k].tree(path).attach_many(pieces, iv.value)
                 moved[k] = moved.get(k, 0) + len(pieces)
         # Anchor the migration on the triggering client: the DES schedules
         # the migrate RPCs on the same virtual clock, no earlier than that
@@ -545,9 +630,8 @@ class GlobalServer:
         for k, pieces in by_shard.items():
             self.submit("attach", client, 24 * len(pieces), shard=k,
                         nranges=len(pieces), path=path)
-            tree = self.shards[k].tree(path)
-            for start, end in pieces:
-                tree.attach(start, end, client)
+            # One windowed splice per multi-range RPC, not per range.
+            self.shards[k].tree(path).attach_many(pieces, client)
         self._observe(client, path, runs, by_shard)
 
     def detach(self, client: int, path: str, runs: List[Tuple[int, int]]) -> bool:
@@ -646,12 +730,14 @@ class BFSClient:
 #: Process-wide deployment topology used by ``BaseFS()`` when the caller
 #: does not pass explicit values: metadata-server shard count, RPC batch
 #: size (0 = off), send-queue linger window (seconds; None = default),
-#: stripe width (bytes), adaptive routing, and the data-plane mode
-#: (``materialize=True`` = the byte-moving fallback).  ``benchmarks.run
-#: --shards/--batch/--linger/--stripe/--adaptive/--materialize`` sets
-#: these so every figure (including SCR and DLIO, which build their own
-#: BaseFS) runs on the same deployment.
-TOPOLOGY = {"shards": 1, "batch": 0, "linger": None,
+#: ack window (unacked fire-and-forget attach flushes a chain may run
+#: ahead of; 0 = every flush blocks), stripe width (bytes), adaptive
+#: routing, and the data-plane mode (``materialize=True`` = the
+#: byte-moving fallback).  ``benchmarks.run --shards/--batch/--linger/
+#: --ack-window/--stripe/--adaptive/--materialize`` sets these so every
+#: figure (including SCR and DLIO, which build their own BaseFS) runs
+#: on the same deployment.
+TOPOLOGY = {"shards": 1, "batch": 0, "linger": None, "ack_window": 0,
             "stripe": DEFAULT_STRIPE, "adaptive": False,
             "materialize": False}
 
@@ -661,7 +747,8 @@ def set_topology(shards: Optional[int] = None,
                  linger: Optional[float] = None,
                  stripe: Optional[int] = None,
                  adaptive: Optional[bool] = None,
-                 materialize: Optional[bool] = None) -> None:
+                 materialize: Optional[bool] = None,
+                 ack_window: Optional[int] = None) -> None:
     """Set process-wide defaults for the simulated deployment."""
     if shards is not None:
         TOPOLOGY["shards"] = shards
@@ -675,6 +762,8 @@ def set_topology(shards: Optional[int] = None,
         TOPOLOGY["adaptive"] = adaptive
     if materialize is not None:
         TOPOLOGY["materialize"] = materialize
+    if ack_window is not None:
+        TOPOLOGY["ack_window"] = ack_window
 
 
 class BaseFS:
@@ -687,6 +776,9 @@ class BaseFS:
     message; ``linger`` is the queue's coalescing window in seconds (0 =
     send-immediate, ``None`` = :data:`DEFAULT_LINGER`); ``adaptive``
     enables access-size stripe widths + load rebalancing;
+    ``ack_window`` bounds the number of unacked fire-and-forget attach
+    flushes the DES lets a client chain run ahead of (0 = every flush
+    blocks on its round trip — the pre-ack-window model, bitwise);
     ``materialize`` selects the byte-moving data plane (every written
     payload converted to real bytes eagerly — the legacy mode, retained
     as the golden-ledger reference and for RAM/wall-clock comparison;
@@ -702,8 +794,11 @@ class BaseFS:
                  batch: Optional[int] = None,
                  linger: Optional[float] = None,
                  adaptive: Optional[bool] = None,
-                 materialize: Optional[bool] = None) -> None:
+                 materialize: Optional[bool] = None,
+                 ack_window: Optional[int] = None) -> None:
         self.ledger = EventLedger()
+        ack = TOPOLOGY["ack_window"] if ack_window is None else ack_window
+        self.ledger.ack_window = max(0, int(ack))
         self.server = GlobalServer(
             self.ledger, num_workers=num_workers,
             num_shards=TOPOLOGY["shards"] if num_shards is None else num_shards,
@@ -711,6 +806,7 @@ class BaseFS:
             batch=TOPOLOGY["batch"] if batch is None else batch,
             linger=TOPOLOGY["linger"] if linger is None else linger,
             adaptive=(TOPOLOGY["adaptive"] if adaptive is None else adaptive),
+            ack_window=self.ledger.ack_window,
         )
         self.materialize = (TOPOLOGY["materialize"] if materialize is None
                             else materialize)

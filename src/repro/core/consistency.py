@@ -52,6 +52,18 @@ class _LayeredFS:
     semantic sync point; its batches close only on the send queue's own
     triggers (size cap, dependency, switch, barriers) — which is the
     relaxation the fig3 posix-with-batching column quantifies.
+
+    Under an ack window (``BaseFS(ack_window=K)``) these same fence
+    points are also where the model DRAINS unacked fire-and-forget
+    attach flushes: a commit/session_close/file_sync/close does not
+    return until every outstanding flush is acknowledged, so no layer
+    can report a sync complete while its metadata is still in flight.
+    The fence routes through :meth:`repro.core.basefs.RPCBatcher.fence`,
+    which records a zero-cost sync marker when the queue is empty but
+    flushes are unacked — the DES stalls the chain there.  Between
+    fences, a dependent read's query (and any blocking RPC) is the other
+    sync point; everything else streams, with ``Event.deps`` edges as
+    the cross-client correctness backstop.
     """
 
     name = "base"

@@ -33,32 +33,63 @@ flavours:
   non-batchable type) — also issue-time: the round trip starts at the
   client's clock, exactly the pre-batching model;
 * **flushed batches** (``Event.flush`` names a close reason) — priced on
-  the send queue's own virtual clock.  Each batch event carries anchors
-  (``Event.opened_after`` / ``Event.last_after``: same-client ledger
-  seqs) from which the DES reconstructs when the queue opened and when
-  its last member was enqueued; with the queue's linger window ``W``
-  (``Event.linger``) the honest flush timestamp is
+  the send queue's own virtual clock.  Each batch event carries
+  per-member anchors (``Event.members``: one same-client ledger seq per
+  coalesced call) from which the DES reconstructs when the queue opened
+  and when every member was enqueued.  Batch *membership* is
+  time-driven: where the queue's linger window ``W`` (``Event.linger``)
+  expired strictly before a later member was issued, the DES RE-SPLITS
+  the batch at the expiry — the expired prefix departs as its own
+  sub-batch at ``max(sub_last_member, sub_open + W)`` and the members
+  after the split open a new sub-batch with its own window — instead of
+  shipping the ledger-order batch whole.  The FINAL sub-batch departs
+  at the recorded close:
 
       send = max(t_last_member, min(t_forced, t_open + W))
 
   where ``t_forced`` is the moment the close was really forced: the
   issuing client's chain position for self-forced closes (size cap,
-  fence, type/file switch, zero-linger activity), the FORCING client's
-  clock (``Event.forced_after``) for a cross-client dep flush — the
-  producer's chain position says nothing about when the consumer asked
-  — and, for barrier/drain closes whose true force time (global phase
-  end) is unknowable mid-replay, the timer expiry itself (conservative:
-  the queue is never modeled as departing earlier than it would have
-  held the batch).  A linger expiry therefore fires *mid-phase*: if the
-  timer ran out while the client was busy with data events, the RPC
-  departs then and its round trip overlaps the remaining client work —
-  the chain only blocks if it reaches the flush slot before the
-  response is back (``clock = max(chain_arrival, t_response)``).  The
-  batch also pays ``batch_flush_lat`` (client-side marshalling,
-  chain-only); server-side per-range work (``task_per_range``) is
-  charged at the worker regardless of batching.  At ``W == 0`` every
-  case degenerates to ``send == chain_arrival`` — clock and ledger
-  order agree exactly (property-tested).
+  fence, type/file switch, zero-linger activity) AND for barrier/drain
+  closes — the flush's ledger slot sits exactly where the client
+  entered the barrier/drain, so the chain position IS its barrier-entry
+  clock (PR 3 used the raw timer expiry as a conservative stand-in,
+  which overheld large-linger tail batches; a regression test pins that
+  the tightened price never undercuts the last member nor exceeds the
+  old bound) — or the FORCING client's clock (``Event.forced_after``)
+  for a cross-client dep flush, since the producer's chain position
+  says nothing about when the consumer asked.  A linger expiry
+  therefore fires *mid-phase*: if the timer ran out while the client
+  was busy with data events, the sub-batch departs then and its round
+  trip overlaps the remaining client work — the chain only blocks if it
+  reaches the flush slot before the response is back
+  (``clock = max(chain_arrival, t_response)``).  Every sub-batch pays
+  ``batch_flush_lat`` (client-side marshalling, chain-only) plus its
+  own master dispatch and worker task; server-side per-range work
+  (``task_per_range``) is charged at the worker regardless of batching.
+  At ``W == 0`` no member can outlive the window (zero-linger queues
+  flush on any intervening activity), so every case degenerates to one
+  sub-batch with ``send == chain_arrival`` — clock and ledger order
+  agree exactly (property-tested).
+
+Ack windows (fire-and-forget attach flushes)
+--------------------------------------------
+With ``ack_window=K > 0`` (``BaseFS(ack_window=K)``, stamped on the
+ledger; ``replay(ack_window=)`` overrides) flushed **attach** batches
+are fire-and-forget: the issuing chain does NOT wait for the response
+at the flush slot and keeps streaming.  The chain stalls only when
+
+* K flush responses are outstanding — the chain (and the next send)
+  waits for the oldest ack, a bounded send-credit window; or
+* a synchronization point arrives: a fence/drain-reason flush, any
+  blocking RPC (query flushes, unqueued types), or the zero-cost
+  ``fence`` marker the batcher records when a consistency fence finds
+  an empty queue — each drains every outstanding ack first.
+
+Phase barriers quiesce the RPC plane: outstanding acks extend the phase
+end and are cleared.  Cross-client visibility stays exact: consumers'
+``Event.deps`` edges still block their service on the producers'
+flushes at the shard masters.  ``ack_window=0`` reproduces the blocking
+model bitwise.
 
 Cross-client dependency edges
 -----------------------------
@@ -81,7 +112,8 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.core.basefs import TIMER_FORCED, Event, EventKind, EventLedger
+from repro.core.basefs import (RPC_FENCE_MARKER, SYNC_FLUSH, Event,
+                               EventKind, EventLedger)
 
 
 @dataclass(frozen=True)
@@ -134,8 +166,13 @@ class PhaseResult:
     name: str
     duration: float                  # makespan of the phase (s)
     bytes_by_kind: Dict[EventKind, int] = field(default_factory=dict)
-    rpc_count: int = 0
+    rpc_count: int = 0               # ledger RPC events priced in the phase
     clients: int = 0
+    # RPC *messages* the DES actually priced: timer-split batches ship
+    # as several sub-batch messages for one ledger event, so this can
+    # exceed ``rpc_count`` — the honest wire traffic under time-driven
+    # membership (client-side fence markers are free and not counted).
+    rpc_msgs: int = 0
 
     def bandwidth(self, *kinds: EventKind) -> float:
         """Aggregate B/s over the phase for the given event kinds."""
@@ -177,7 +214,10 @@ class FlushTrace:
     ``send < chain_arrival`` is the mid-phase close: the linger timer (or
     the last member) released the batch strictly before the client chain
     reached the batch's ledger slot, so the round trip overlapped client
-    work that the ledger orders after it.
+    work that the ledger orders after it.  A timer-split batch ships as
+    ``splits`` sub-batch messages: ``send`` is the FIRST sub-batch's
+    departure, ``response`` the LAST sub-batch's completed round trip,
+    and ``sends`` every sub-batch departure in order.
     """
 
     event: Event
@@ -188,6 +228,11 @@ class FlushTrace:
     send: float           # honest departure on the virtual clock
     dep_wait: float       # extra service delay from cross-client edges (s)
     response: float       # round trip completed back at the client
+    splits: int = 1       # sub-batch messages after timer re-splitting
+    sends: Tuple[float, ...] = ()   # per-sub-batch departures
+    blocking: bool = True  # chain waited for the response (ack_window=0
+    #                        or a sync-class flush); False = fire-and-forget
+    ack_wait: float = 0.0  # chain stall waiting for send credit (s)
 
 
 class CostModel:
@@ -201,11 +246,18 @@ class CostModel:
                honor_edges: bool = True,
                record_order: Optional[List[int]] = None,
                exec_order: Optional[List[int]] = None,
+               ack_window: Optional[int] = None,
+               record_splits: Optional[Dict[int, Tuple[int, ...]]] = None,
+               exec_splits: Optional[Dict[int, Tuple[int, ...]]] = None,
                ) -> List[PhaseResult]:
         """Price the ledger; optionally append per-event ``(event, start,
         finish)`` DES times to ``trace`` (for a flushed batch, ``start``
         is its virtual-clock departure) and per-batch :class:`FlushTrace`
         records to ``flush_trace``.
+
+        ``ack_window`` bounds the unacked fire-and-forget attach flushes
+        a client chain may run ahead of; ``None`` uses the deployment's
+        own ``ledger.ack_window`` (0 = blocking, the pre-ack model).
 
         ``honor_edges=False`` ignores ``Event.deps`` entirely — the
         optimistic pre-edge model, where a consumer can be serviced
@@ -219,7 +271,15 @@ class CostModel:
         every resource in the SAME order and differs only by the
         dependency waits, so each of its timestamps — and the makespan —
         is pointwise <= the honest replay's (max-plus monotonicity; the
-        edge-monotonicity property tests rely on this)."""
+        edge-monotonicity property tests rely on this).  Timer-split
+        membership adds a structural degree of freedom to that argument:
+        pass ``record_splits`` (a dict the replay fills with each
+        flushed event's sub-batch boundaries) and re-replay with
+        ``exec_splits`` set to it so the counterfactual ships the SAME
+        sub-batch messages — recomputing the splits under relaxed costs
+        could change the message count and break pointwise dominance.
+        The same record/exec pair makes ack-window comparisons sound
+        (the ``ack_window`` monotonicity property tests rely on it)."""
         hw = self.hw
         node_of = dict(ledger.client_node)
         # Split the ledger at markers into phases.
@@ -255,6 +315,28 @@ class CostModel:
                 table[key] = _Resource()
             return table[key]
 
+        def service(shard: int, arrive: float, nranges: int) -> float:
+            """Master dispatch + round-robin worker task for one RPC
+            message at ``shard``; returns the server-side completion."""
+            dispatched = res(shard_master, shard).reserve(
+                arrive, hw.server_occupancy
+            )
+            if shard not in shard_workers:
+                shard_workers[shard] = [
+                    _Resource() for _ in range(hw.server_workers)
+                ]
+                shard_rr[shard] = 0
+            workers = shard_workers[shard]
+            rr = shard_rr[shard]
+            # Batched RPCs carry many range descriptors in one
+            # round-trip; the worker pays per descriptor.
+            done = workers[rr].reserve(
+                dispatched,
+                hw.task_service + max(1, nranges) * hw.task_per_range,
+            )
+            shard_rr[shard] = (rr + 1) % len(workers)
+            return done
+
         # Virtual-clock bookkeeping.  ``chain_done`` records the chain
         # finish time of events referenced as send-queue anchors
         # (opened_after/last_after); ``effect_done`` records the
@@ -270,9 +352,18 @@ class CostModel:
             if e.forced_after >= 0:
                 referenced.add(e.forced_after)
             referenced.update(e.deps)
+            for a, _nr in e.members:
+                if a >= 0:
+                    referenced.add(a)
         chain_done: Dict[int, float] = {}
         effect_done: Dict[int, float] = {}
         op_ptr = 0  # consumed prefix of ``exec_order`` (forced replays)
+        # Ack-window state: per-client heap of outstanding (unacked)
+        # fire-and-forget flush responses.  Drained by sync points and
+        # at phase barriers (which extend the phase end accordingly).
+        ack_K = (getattr(ledger, "ack_window", 0) if ack_window is None
+                 else max(0, ack_window))
+        unacked: Dict[int, List[float]] = {}
 
         for name, events in phases:
             # Per-client chains, concurrent within the phase.
@@ -283,9 +374,10 @@ class CostModel:
             idx: Dict[int, int] = {c: 0 for c in chains}
             bytes_by_kind: Dict[EventKind, int] = {}
             rpc_count = 0
+            rpc_msgs = 0
 
             def execute(e: Event) -> None:
-                nonlocal rpc_count
+                nonlocal rpc_count, rpc_msgs
                 c = e.client
                 t = clock[c]
                 start = t
@@ -325,83 +417,179 @@ class CostModel:
                     t = pfs.reserve(t, hw.pfs_op + nb / hw.pfs_bw) + hw.pfs_lat
                 elif k is EventKind.PFS_READ:
                     t = pfs.reserve(t, hw.pfs_op + nb / hw.pfs_bw) + hw.pfs_lat
-                elif k is EventKind.RPC:
+                elif k is EventKind.RPC and e.rpc_type == RPC_FENCE_MARKER:
+                    # Client-side sync marker (ack windows): a fence hit
+                    # an empty send queue while fire-and-forget flushes
+                    # were still unacked — the chain drains them here.
+                    # No server traffic, no wire message.
+                    pend = unacked.get(c)
+                    if pend:
+                        t = max(t, max(pend))
+                        pend.clear()
+                elif k is EventKind.RPC and e.flush:
                     rpc_count += 1
-                    if e.flush:
-                        # Time-driven send queue: reconstruct the queue's
-                        # open / last-member times from the same-client
-                        # anchors and send at the linger expiry if it
-                        # fired before the forced close.  The forced-close
-                        # moment depends on WHO forced it: the issuing
-                        # client's own chain position for self-forced
-                        # closes (size/fence/switch/zero-linger), the
-                        # forcing client's clock for a cross-client dep
-                        # flush, and — for barrier/drain closes, whose
-                        # real force time (global phase end) is not
-                        # knowable mid-replay — the timer alone (a
-                        # conservative stand-in: never earlier than the
-                        # queue would really have held the batch).
+                    # Time-driven send queue: reconstruct every member's
+                    # enqueue clock from the per-member anchors and
+                    # RE-SPLIT the batch wherever the linger window
+                    # expired strictly before the next member was issued
+                    # — membership is time-decided, not ledger-decided.
+                    # Each sub-batch ships as its own RPC message.
+                    W = e.linger
+                    splittable = bool(e.members)
+                    if splittable:
+                        mt = [max(now, chain_done.get(a, now))
+                              for a, _nr in e.members]
+                        mranges = [nr for _a, nr in e.members]
+                    else:
+                        # Aggregate-anchor fallback (hand-built ledgers
+                        # without per-member metadata): one pseudo-member
+                        # per anchor, never split — exactly the PR-4
+                        # shape (one message, clamped to the last
+                        # member; the zero-range open pseudo-member only
+                        # anchors the window).
                         t_open = max(now, chain_done.get(e.opened_after,
                                                          now))
-                        t_last = max(t_open, chain_done.get(e.last_after,
-                                                            now))
-                        if e.flush in TIMER_FORCED:
-                            t_forced = t_open + e.linger
-                        elif e.forced_after >= 0:
-                            t_forced = chain_done.get(e.forced_after, now)
-                        else:
-                            t_forced = t
-                        send = max(t_last, min(t_forced,
-                                               t_open + e.linger))
-                        send += hw.batch_flush_lat
+                        mt = [t_open,
+                              max(t_open, chain_done.get(e.last_after,
+                                                         now))]
+                        mranges = [0, max(1, e.rpc_ranges)]
+                    if not splittable:
+                        bounds = ()
+                    elif exec_splits is not None:
+                        bounds = exec_splits.get(e.seq, ())
                     else:
-                        send = t
-                    arrive = send + hw.rpc_net_lat
+                        bounds_l = []
+                        open_t = mt[0]
+                        for i in range(1, len(mt)):
+                            if mt[i] > open_t + W:
+                                bounds_l.append(i)
+                                open_t = mt[i]
+                        bounds = tuple(bounds_l)
+                    if record_splits is not None:
+                        record_splits[e.seq] = bounds
+                    # Fire-and-forget eligibility: attach batches whose
+                    # close is not itself a sync point.  Fences and
+                    # drain closes synchronize; query flushes block on
+                    # their answer (a dependent read consumes it).
+                    is_async = (ack_K > 0 and e.rpc_type == "attach"
+                                and e.flush not in SYNC_FLUSH)
+                    heap = unacked.setdefault(c, []) if ack_K > 0 else None
+                    dep_ready = None
                     dep_wait = 0.0
                     if honor_edges and e.deps:
                         # Producer edges: service cannot start before the
                         # producers' RPCs completed at their shards.
-                        ready = max(effect_done.get(d, now)
-                                    for d in e.deps)
-                        dep_wait = max(0.0, ready - arrive)
-                        arrive = max(arrive, ready)
-                    dispatched = res(shard_master, e.shard).reserve(
-                        arrive, hw.server_occupancy
-                    )
-                    if e.shard not in shard_workers:
-                        shard_workers[e.shard] = [
-                            _Resource() for _ in range(hw.server_workers)
-                        ]
-                        shard_rr[e.shard] = 0
-                    workers = shard_workers[e.shard]
-                    rr = shard_rr[e.shard]
-                    # Batched RPCs carry many range descriptors in one
-                    # round-trip; the worker pays per descriptor.
-                    nranges = max(1, e.rpc_ranges)
-                    done = workers[rr].reserve(
-                        dispatched,
-                        hw.task_service + nranges * hw.task_per_range,
-                    )
-                    shard_rr[e.shard] = (rr + 1) % len(workers)
-                    effect = done
-                    resp = done + hw.rpc_net_lat  # response to client
-                    if e.flush:
-                        # The chain only blocks if it reaches the flush
-                        # slot before the response is back: an early
-                        # (timer-fired) flush overlaps client work.
-                        start = send - hw.batch_flush_lat
-                        if flush_trace is not None:
-                            flush_trace.append(FlushTrace(
-                                event=e, phase=name, opened=t_open,
-                                last_member=t_last, chain_arrival=t,
-                                send=start, dep_wait=dep_wait,
-                                response=resp,
-                            ))
+                        dep_ready = max(effect_done.get(d, now)
+                                        for d in e.deps)
+                    chain_arrival = t
+                    ack_wait = 0.0
+                    sends: List[float] = []
+                    effect = now
+                    resp = now
+                    starts_ = (0, *bounds)
+                    ends_ = (*bounds, len(mt))
+                    for gi, (lo, hi) in enumerate(zip(starts_, ends_)):
+                        if lo >= hi:
+                            continue  # degenerate replayed boundary
+                        t_open_g = mt[lo]
+                        t_last_g = mt[hi - 1]
+                        if hi < len(mt):
+                            # Timer split: the window expired strictly
+                            # before member ``hi`` was issued, so this
+                            # sub-batch departed on its own timer (never
+                            # before its last member — the clamp matters
+                            # only under a replayed split plan, where
+                            # member clocks can differ from the
+                            # recording run's).
+                            send = max(t_last_g, t_open_g + W)
+                        else:
+                            # Final sub-batch: the recorded close.  The
+                            # force moment is the issuing client's chain
+                            # position — for barrier/drain closes that
+                            # IS its barrier-entry clock (tightened from
+                            # PR 3's raw-timer stand-in) — or the
+                            # forcing client's clock for a cross-client
+                            # dep flush.
+                            if e.forced_after >= 0:
+                                t_forced = chain_done.get(e.forced_after,
+                                                          now)
+                            else:
+                                t_forced = t
+                            send = max(t_last_g, min(t_forced,
+                                                     t_open_g + W))
+                        if is_async and heap is not None:
+                            # Bounded send credit: with K flushes
+                            # unacked, the next send (and the chain,
+                            # parked at the flush slot) waits for the
+                            # oldest outstanding ack.
+                            while len(heap) >= ack_K:
+                                ready = heapq.heappop(heap)
+                                if ready > t:
+                                    ack_wait += ready - t
+                                    t = ready
+                                if ready > send:
+                                    send = ready
+                        send += hw.batch_flush_lat
+                        arrive = send + hw.rpc_net_lat
+                        if dep_ready is not None:
+                            if gi == 0:
+                                dep_wait = max(0.0, dep_ready - arrive)
+                            arrive = max(arrive, dep_ready)
+                        done = service(e.shard, arrive,
+                                       sum(mranges[lo:hi]))
+                        effect = done
+                        resp = done + hw.rpc_net_lat
+                        sends.append(send - hw.batch_flush_lat)
+                        rpc_msgs += 1
+                        if is_async and heap is not None:
+                            heapq.heappush(heap, resp)
+                    # The chain only blocks if it reaches the flush slot
+                    # before the response is back: an early
+                    # (timer-fired) flush overlaps client work — and a
+                    # fire-and-forget flush does not block on its
+                    # response at all.
+                    start = sends[0] if sends else t
+                    if not is_async:
+                        if heap:
+                            # A sync-class flush drains the window.
+                            t = max(t, max(heap))
+                            heap.clear()
                         t = max(t, resp)
-                    else:
-                        t = resp
+                    if flush_trace is not None:
+                        flush_trace.append(FlushTrace(
+                            event=e, phase=name, opened=mt[0],
+                            last_member=mt[-1],
+                            chain_arrival=chain_arrival,
+                            send=start, dep_wait=dep_wait,
+                            response=resp, splits=len(sends),
+                            sends=tuple(sends), blocking=not is_async,
+                            ack_wait=ack_wait,
+                        ))
                     if e.seq in referenced:
                         effect_done[e.seq] = effect
+                elif k is EventKind.RPC:
+                    rpc_count += 1
+                    rpc_msgs += 1
+                    # Unqueued RPC (batch=0 or a non-batchable type):
+                    # the round trip starts at the client's clock,
+                    # exactly the pre-batching model.  A blocking call
+                    # is a sync point: outstanding fire-and-forget acks
+                    # drain first (no-op at ack_window=0).
+                    pend = unacked.get(c)
+                    if pend:
+                        t = max(t, max(pend))
+                        pend.clear()
+                        start = t
+                    send = t
+                    arrive = send + hw.rpc_net_lat
+                    if honor_edges and e.deps:
+                        arrive = max(arrive,
+                                     max(effect_done.get(d, now)
+                                         for d in e.deps))
+                    done = service(e.shard, arrive, e.rpc_ranges)
+                    t = done + hw.rpc_net_lat  # response to client
+                    if e.seq in referenced:
+                        effect_done[e.seq] = done
                 bytes_by_kind[k] = bytes_by_kind.get(k, 0) + nb
                 if e.seq in referenced:
                     chain_done[e.seq] = t
@@ -462,6 +650,14 @@ class CostModel:
                     taken += 1
 
             end = max(clock.values(), default=now)
+            if ack_K > 0:
+                # A phase barrier quiesces the RPC plane: outstanding
+                # fire-and-forget acks extend the phase end and are
+                # acked before the next phase starts.
+                for pend in unacked.values():
+                    if pend:
+                        end = max(end, max(pend))
+                        pend.clear()
             results.append(
                 PhaseResult(
                     name=name,
@@ -469,6 +665,7 @@ class CostModel:
                     bytes_by_kind=bytes_by_kind,
                     rpc_count=rpc_count,
                     clients=len(chains),
+                    rpc_msgs=rpc_msgs,
                 )
             )
             now = end  # global barrier

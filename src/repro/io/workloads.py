@@ -210,6 +210,19 @@ class WorkloadResult:
         return self.phase("read").io_bandwidth
 
 
+@lru_cache(maxsize=8)
+def _random_deal(total: int, seed: int) -> tuple:
+    """The seeded permutation of all written blocks, dealt to readers.
+
+    Shuffled ONCE per (total, seed) — every reader of a random-pattern
+    workload slices the same deal, instead of each rank re-shuffling the
+    full block list (which made fig7's 2048-client rows O(readers x
+    total) in `random.shuffle` alone)."""
+    blocks = list(range(total))
+    _random.Random(seed).shuffle(blocks)
+    return tuple(blocks)
+
+
 def _write_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
     if cfg.write_pattern == "contig":
         base = rank * cfg.m_w * cfg.s
@@ -226,8 +239,7 @@ def _read_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
     if cfg.read_pattern == "strided":
         return [(j * cfg.readers + rank) * cfg.s for j in range(cfg.m_r)]
     if cfg.read_pattern == "random":
-        blocks = list(range(cfg.writers * cfg.m_w))
-        _random.Random(cfg.seed).shuffle(blocks)
+        blocks = _random_deal(cfg.writers * cfg.m_w, cfg.seed)
         mine = blocks[rank * cfg.m_r : (rank + 1) * cfg.m_r]
         return [b * cfg.s for b in mine]
     if cfg.read_pattern == "hot":
@@ -256,15 +268,17 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  linger: Optional[float] = None,
                  adaptive: Optional[bool] = None,
                  materialize: Optional[bool] = None,
+                 ack_window: Optional[int] = None,
                  timings: Optional[Dict[str, float]] = None
                  ) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
     per call unless the caller passes one in.  ``shards``/``batch``/
-    ``linger``/``adaptive``/``materialize`` override the process-wide
-    :data:`TOPOLOGY` defaults for that fresh BaseFS (ignored when ``fs``
-    is supplied); ``None`` already means "use TOPOLOGY" inside ``BaseFS``.
+    ``linger``/``adaptive``/``materialize``/``ack_window`` override the
+    process-wide :data:`TOPOLOGY` defaults for that fresh BaseFS (ignored
+    when ``fs`` is supplied); ``None`` already means "use TOPOLOGY"
+    inside ``BaseFS``.
 
     Writes carry :func:`pattern_extent` descriptors and reads are
     verified symbolically against them — zero byte materialization on
@@ -275,7 +289,8 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
     t0 = _time.perf_counter()
     if fs is None:
         fs = BaseFS(num_shards=shards, batch=batch, linger=linger,
-                    adaptive=adaptive, materialize=materialize)
+                    adaptive=adaptive, materialize=materialize,
+                    ack_window=ack_window)
     layer = make_fs(cfg.model, fs)
     ledger = fs.ledger
 

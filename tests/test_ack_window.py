@@ -1,0 +1,362 @@
+"""Ack-windowed fire-and-forget attach flushes + timer-split membership.
+
+PR-5 tentpole coverage:
+
+* **PR-4 golden invariance** — ``ack_window=0`` with ``linger=0``
+  replays event-for-event identical (ledger digest AND bitwise DES
+  durations) to ledgers captured from the repository BEFORE the
+  time-driven membership / ack-window changes, across all four
+  consistency models;
+* **fire-and-forget semantics** — with ``ack_window=K > 0`` a streaming
+  writer's chain runs past its attach flushes and only stalls when K
+  flushes are unacked or a sync point (fence, drain, dependent read)
+  forces synchronization — fences on an EMPTY queue record a zero-cost
+  sync marker so unacked flushes cannot leak past a commit;
+* **monotonicity** — on the SAME realized schedule and split plan
+  (forced-order counterfactual), increasing the ack window never
+  increases any event's completion time (seeded + hypothesis);
+* **timer-split determinism** — sub-batch split plans are a pure
+  function of the seeded schedule: identical across replays, and
+  replaying a recorded plan reproduces identical timing.
+"""
+
+import hashlib
+import random
+
+import pytest
+
+from repro.core.basefs import RPC_FENCE_MARKER, BaseFS
+from repro.core.consistency import make_fs
+from repro.core.costmodel import CostModel
+from repro.io.workloads import cc_r, run_workload
+
+KB = 1024
+
+
+# ---------------------------------------------------------------------------
+# PR-4 golden invariance: ack_window=0 + linger=0 across all four models.
+# ---------------------------------------------------------------------------
+#: Captured from the repository at PR 4 (commit fcb3cca), before the
+#: timer-split / ack-window changes: sha256 over the repr of the PR-4
+#: event tuples, plus bitwise per-phase DES durations (float.hex), for
+#: ``cc_r(2, 8KB, model, p=3, m=4)`` on ``BaseFS(num_shards=2, batch=8,
+#: linger=0.0)``.
+PR4_GOLDEN = {
+    "posix": (
+        "4cf3f2cff7b38771b2f22b2c27f77da35c00b521730d6f61befc5959c6a4aff1",
+        [("write", "0x1.fb425610d8c0bp-12"),
+         ("read", "0x1.1bdcb2fc74b90p-11")],
+    ),
+    "commit": (
+        "8bdfd31ab5c33030c2bce5355b2bfc436ea8668c696ea8fa78b2f9642a315f2a",
+        [("write", "0x1.b4bc70f03e528p-12"),
+         ("read", "0x1.1bdcb2fc74b90p-11")],
+    ),
+    "session": (
+        "d5ed41d99ce98a982a9a1ee73c5fab3e4fe58c0866c11ac805e31dd7f1f2b659",
+        [("phase0", "0x1.47fe9c52b17dcp-13"),
+         ("write", "0x1.b4bc70f03e526p-12"),
+         ("read", "0x1.f21948b7900b0p-12")],
+    ),
+    "mpiio": (
+        "a6e1d39671cd24033ae353fba8a9fbc4f6ace67958eb44dc4b381b8afef78043",
+        [("write", "0x1.14fde8f97e30fp-11"),
+         ("read", "0x1.f21948b7900b6p-12")],
+    ),
+}
+
+
+def _pr4_event_tuples(ledger):
+    """The PR-4 Event fields (``members`` postdates the capture)."""
+    return [
+        (e.kind.value, e.client, e.nbytes, e.rpc_type, e.peer, e.seq,
+         e.rpc_ranges, e.shard, e.rpc_calls, e.flush, e.linger, e.deps,
+         e.opened_after, e.last_after, e.forced_after)
+        for e in ledger.events
+    ]
+
+
+@pytest.mark.parametrize("model", sorted(PR4_GOLDEN))
+def test_ack0_linger0_matches_pr4_goldens(model):
+    digest, phases = PR4_GOLDEN[model]
+    cfg = cc_r(2, 8 * KB, model, p=3, m=4)
+    fs = BaseFS(num_shards=2, batch=8, linger=0.0, ack_window=0)
+    res = run_workload(cfg, fs=fs)
+    got = hashlib.sha256(
+        repr(_pr4_event_tuples(fs.ledger)).encode()
+    ).hexdigest()
+    assert got == digest, f"{model}: ledger diverged from the PR-4 capture"
+    assert [(p.name, p.duration.hex()) for p in res.phases] == phases, (
+        f"{model}: DES durations diverged from the PR-4 capture"
+    )
+
+
+@pytest.mark.parametrize("model", sorted(PR4_GOLDEN))
+def test_ack_window_default_is_zero_and_bitwise_equal(model):
+    # Omitting ack_window entirely == ack_window=0, bitwise: ledger,
+    # per-event DES times and phase durations.
+    cfg = cc_r(2, 8 * KB, model, p=3, m=4)
+    traces, durations, tuples = [], [], []
+    for kwargs in ({}, {"ack_window": 0}):
+        fs = BaseFS(num_shards=2, batch=8, **kwargs)
+        run_workload(cfg, fs=fs)
+        tr = []
+        phases = CostModel().replay(fs.ledger, trace=tr)
+        traces.append([(e.seq, s, f) for e, s, f in tr])
+        durations.append([(p.name, p.duration) for p in phases])
+        tuples.append(_pr4_event_tuples(fs.ledger))
+    assert tuples[0] == tuples[1]
+    assert traces[0] == traces[1]
+    assert durations[0] == durations[1]
+
+
+# ---------------------------------------------------------------------------
+# Fire-and-forget semantics.
+# ---------------------------------------------------------------------------
+def _stream_writer(ack_window, n_ops=16, batch=4, linger=0.0):
+    """One posix client streaming small writes from the MEMORY burst
+    buffer: at linger=0 every attach flushes as a singleton before the
+    next write, and the sub-microsecond mem tier makes the RPC round
+    trip the only thing that can hold the chain back — the config where
+    blocking flushes hurt a streaming writer the most."""
+    fs = BaseFS(batch=batch, linger=linger, ack_window=ack_window)
+    pfs = make_fs("posix", fs)
+    fh = pfs.open(0, "/stream", node=0, tier="mem")
+    fs.ledger.mark_phase("write")
+    for j in range(n_ops):
+        pfs.seek(fh, j * 8 * KB)
+        pfs.write(fh, b"w" * 8 * KB)
+    fs.drain()
+    return fs
+
+
+def test_fire_and_forget_lets_writers_stream():
+    durs, fts = {}, {}
+    for k in (0, 4):
+        fs = _stream_writer(ack_window=k)
+        ft = []
+        phases = CostModel().replay(fs.ledger, flush_trace=ft)
+        durs[k] = next(p for p in phases if p.name == "write").duration
+        fts[k] = ft
+    # ack_window=0: every linger-reason flush blocks the chain.
+    assert all(rec.blocking for rec in fts[0]
+               if rec.event.flush == "linger")
+    # ack_window=4: the same flushes are fire-and-forget and the write
+    # phase gets strictly shorter — the chain streams past the RPCs.
+    assert all(not rec.blocking for rec in fts[4]
+               if rec.event.flush == "linger")
+    assert durs[4] < durs[0]
+    # The drain-close tail flush stays synchronous in both.
+    assert all(rec.blocking for rec in fts[4]
+               if rec.event.flush == "close")
+
+
+def test_window_bound_stalls_at_k_unacked():
+    # K=1 admits exactly one outstanding flush: the second flush in a
+    # burst must wait for the first ack (ack_wait > 0 somewhere), while
+    # a wide window absorbs the whole burst without stalling.
+    stalls = {}
+    for k in (1, 64):
+        fs = _stream_writer(ack_window=k, n_ops=12)
+        ft = []
+        CostModel().replay(fs.ledger, flush_trace=ft)
+        stalls[k] = sum(rec.ack_wait for rec in ft)
+    assert stalls[1] > 0.0
+    assert stalls[64] == 0.0
+    assert stalls[64] < stalls[1]
+
+
+def test_fence_on_empty_queue_records_sync_marker():
+    # 8 writes at batch=4 -> both attach batches close on the SIZE cap,
+    # so the file-close fence finds an empty queue.  With an ack window
+    # the unacked flushes must not leak past the fence: a zero-cost
+    # sync marker is recorded and the DES drains the window there.
+    fs = BaseFS(batch=4, ack_window=2)
+    pfs = make_fs("posix", fs)
+    fh = pfs.open(0, "/fence", node=0)
+    for _ in range(8):
+        pfs.write(fh, b"x" * KB)
+    pfs.close(fh)
+    attaches = [e for e in fs.ledger.events if e.rpc_type == "attach"]
+    markers = [e for e in fs.ledger.events
+               if e.rpc_type == RPC_FENCE_MARKER]
+    assert [e.flush for e in attaches] == ["size", "size"]
+    assert len(markers) == 1
+    assert markers[0].seq > attaches[-1].seq
+    # The chain's clock at the marker covers every flush response.
+    tr, ft = [], []
+    CostModel().replay(fs.ledger, trace=tr, flush_trace=ft)
+    marker_finish = next(f for e, _s, f in tr
+                         if e.rpc_type == RPC_FENCE_MARKER)
+    assert marker_finish >= max(rec.response for rec in ft)
+    # Without an ack window the same run records no marker (golden
+    # ledgers stay clean).
+    fs0 = BaseFS(batch=4, ack_window=0)
+    pfs0 = make_fs("posix", fs0)
+    fh0 = pfs0.open(0, "/fence", node=0)
+    for _ in range(8):
+        pfs0.write(fh0, b"x" * KB)
+    pfs0.close(fh0)
+    assert not any(e.rpc_type == RPC_FENCE_MARKER
+                   for e in fs0.ledger.events)
+
+
+def test_dependent_read_synchronizes_consumer():
+    # A reader's query flush stays blocking under any ack window (its
+    # answer is consumed), and the producer's dep-forced attach flush is
+    # fire-and-forget for the PRODUCER while the consumer still waits on
+    # the Event.deps edge — the correctness backstop.
+    fs = BaseFS(batch=16, ack_window=8)
+    pfs = make_fs("posix", fs)
+    w = pfs.open(0, "/f", node=0)
+    pfs.write(w, b"live data!")
+    r = pfs.open(1, "/f", node=1)
+    assert pfs.read(r, 10) == b"live data!"
+    fs.drain()
+    ft = []
+    CostModel().replay(fs.ledger, flush_trace=ft)
+    attach = next(rec for rec in ft if rec.event.rpc_type == "attach")
+    query = next(rec for rec in ft if rec.event.rpc_type == "query")
+    assert attach.event.flush == "dep" and not attach.blocking
+    assert query.blocking
+    assert attach.event.seq in query.event.deps
+    assert query.dep_wait > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Monotonicity: a wider ack window never slows any event (forced order).
+# ---------------------------------------------------------------------------
+def _random_script(rng, n_ops=80, n_clients=4):
+    return [(
+        rng.randrange(n_clients),
+        "write" if rng.random() < 0.7 else "read",
+        rng.choice(("/s/a", "/s/b")),
+        rng.randrange(0, 4096),
+        rng.randrange(1, 512),
+    ) for _ in range(n_ops)]
+
+
+def _apply_script(fs, script):
+    layer = make_fs("posix", fs)
+    handles = {}
+    for client, op, path, offset, size in script:
+        key = (client, path)
+        if key not in handles:
+            handles[key] = layer.open(client, path, node=client % 3)
+        fh = handles[key]
+        layer.seek(fh, offset)
+        if op == "write":
+            layer.write(fh, bytes(
+                ((offset + i) * 13 + client) & 0xFF for i in range(size)
+            ))
+        else:
+            layer.read(fh, size)
+    fs.drain()
+
+
+def _ack_monotone_check(script, batch, shards, linger, k_lo, k_hi):
+    # Build the ledger ONCE with an ack window enabled so fence markers
+    # are present, then price the SAME schedule and split plan at both
+    # windows: relaxing the window can only remove stalls (max-plus).
+    fs = BaseFS(batch=batch, num_shards=shards, linger=linger,
+                ack_window=max(1, k_lo))
+    _apply_script(fs, script)
+    cm = CostModel()
+    order, splits, t_lo, t_hi = [], {}, [], []
+    lo = cm.replay(fs.ledger, trace=t_lo, ack_window=k_lo,
+                   record_order=order, record_splits=splits)
+    hi = cm.replay(fs.ledger, trace=t_hi, ack_window=k_hi,
+                   exec_order=order, exec_splits=splits)
+    for (e1, _s1, f1), (e2, _s2, f2) in zip(t_lo, t_hi):
+        assert e1.seq == e2.seq
+        assert f2 <= f1 + 1e-15, (
+            f"widening ack {k_lo}->{k_hi} slowed seq {e1.seq}"
+        )
+    assert sum(p.duration for p in hi) \
+        <= sum(p.duration for p in lo) + 1e-15
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_wider_ack_window_never_slower_seeded(seed):
+    rng = random.Random(seed)
+    k_lo = rng.choice([0, 1, 2])
+    _ack_monotone_check(_random_script(rng),
+                        batch=rng.choice([2, 4, 8, 16]),
+                        shards=rng.choice([1, 2, 4]),
+                        linger=rng.choice([0.0, 20e-6, None]),
+                        k_lo=k_lo, k_hi=k_lo + rng.choice([1, 4, 16]))
+
+
+def test_wider_ack_window_never_slower_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    op = st.tuples(
+        st.integers(0, 3),
+        st.sampled_from(["write", "read"]),
+        st.sampled_from(["/s/a", "/s/b"]),
+        st.integers(0, 2048),
+        st.integers(1, 256),
+    )
+
+    @hypothesis.given(
+        script=st.lists(op, min_size=1, max_size=50),
+        batch=st.integers(2, 16),
+        shards=st.sampled_from([1, 2, 4]),
+        linger=st.sampled_from([0.0, 20e-6, 50e-6]),
+        k_lo=st.integers(0, 4),
+        k_step=st.integers(1, 16),
+    )
+    @hypothesis.settings(deadline=None, max_examples=40)
+    def run(script, batch, shards, linger, k_lo, k_step):
+        _ack_monotone_check(script, batch, shards, linger,
+                            k_lo, k_lo + k_step)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Timer-split determinism under seeded schedules.
+# ---------------------------------------------------------------------------
+def _split_run(seed):
+    fs = BaseFS(batch=16, num_shards=2, linger=30e-6)
+    _apply_script(fs, _random_script(random.Random(seed), n_ops=100))
+    return fs
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_timer_splits_deterministic(seed):
+    plans, traces = [], []
+    for _ in range(2):
+        fs = _split_run(seed)
+        splits, tr = {}, []
+        CostModel().replay(fs.ledger, trace=tr, record_splits=splits)
+        plans.append(splits)
+        traces.append([(e.seq, s, f) for e, s, f in tr])
+    assert plans[0] == plans[1]
+    assert traces[0] == traces[1]
+
+
+def test_recorded_split_plan_replays_identically():
+    fs = _split_run(0)
+    cm = CostModel()
+    splits, order, t1 = {}, [], []
+    cm.replay(fs.ledger, trace=t1, record_splits=splits,
+              record_order=order)
+    # The raced schedule must actually exercise re-splitting somewhere.
+    assert any(b for b in splits.values()), "no timer split occurred"
+    t2 = []
+    cm.replay(fs.ledger, trace=t2, exec_splits=splits, exec_order=order)
+    assert [(e.seq, s, f) for e, s, f in t1] \
+        == [(e.seq, s, f) for e, s, f in t2]
+
+
+def test_split_messages_counted_in_phase_result():
+    fs = _split_run(1)
+    splits = {}
+    phases = CostModel().replay(fs.ledger, record_splits=splits)
+    n_extra = sum(len(b) for b in splits.values())
+    assert n_extra > 0
+    total_events = sum(p.rpc_count for p in phases)
+    total_msgs = sum(p.rpc_msgs for p in phases)
+    assert total_msgs == total_events + n_extra

@@ -137,9 +137,10 @@ def test_batched_rpc_not_priced_before_last_member():
         pfs.write(fh, b"x" * 64)
     fs.drain()
 
-    trace = []
-    CostModel().replay(fs.ledger, trace=trace)
+    trace, ft = [], []
+    CostModel().replay(fs.ledger, trace=trace, flush_trace=ft)
     times = {e.seq: (start, finish) for e, start, finish in trace}
+    recs = {rec.event.seq: rec for rec in ft}
 
     member_writes = []
     checked = 0
@@ -150,10 +151,16 @@ def test_batched_rpc_not_priced_before_last_member():
             assert e.rpc_calls == len(member_writes)
             # (a) ledger order: every member write precedes the flush.
             assert all(w.seq < e.seq for w in member_writes)
-            # (b) DES pricing: RPC start >= last member's completion.
-            rpc_start = times[e.seq][0]
+            # (b) DES pricing: no part of the batch departs before its
+            # FIRST member, and the FINAL sub-batch — the one carrying
+            # the last member (membership is time-split where the
+            # window expired mid-batch) — departs no earlier than that
+            # member's completion.
+            rec = recs[e.seq]
+            first_member_done = times[member_writes[0].seq][1]
             last_member_done = max(times[w.seq][1] for w in member_writes)
-            assert rpc_start >= last_member_done
+            assert times[e.seq][0] >= first_member_done
+            assert rec.sends[-1] >= last_member_done
             member_writes = []
             checked += 1
     assert checked == 3  # 12 writes -> 4+4+4

@@ -32,7 +32,9 @@ SHRINK = {
     "fig6": [(fig6_dl, "HOSTS", (2,)), (fig6_dl, "STRONG_TOTAL", 32),
              (fig6_dl, "WEAK_PER_PROC", 4), (fig6_dl, "SAMPLE", 8 * 1024)],
     "fig7": [(fig7_shard, "FAST_NODES", (2,)), (fig7_shard, "SHARDS", (1, 2)),
-             (fig7_shard, "LINGER_US", (0.0, 50.0, 1000.0))],
+             (fig7_shard, "LINGER_US", (0.0, 50.0, 1000.0)),
+             (fig7_shard, "ACK_WINDOWS", (0, 1, 16)),
+             (fig7_shard, "ACK_DED_M", 20)],
     "fig8": [(fig8_hot, "FAST_NODES", (2,))],
 }
 
@@ -65,6 +67,28 @@ def test_unknown_figure_name_exits_2(capsys):
     assert rc == 2
     err = capsys.readouterr().err
     assert "fig99" in err and "fig3" in err and "fig8" in err
+
+
+def test_fig7_ack_window_column_in_smoke_grid(monkeypatch):
+    # The ack-window sweep rides in every fig7 grid (incl. smoke): the
+    # dedicated-writer sweep carries one row per window, the saturated
+    # scale carries the 0-vs-max null pair, and every row exposes the
+    # DES wire-message count next to the ledger event count.
+    for mod, attr, val in SHRINK["fig7"]:
+        monkeypatch.setattr(mod, attr, val)
+    rows = fig7_shard.run(fast=True)
+    ded = [r for r in rows if r["workload"] == "CN-W-ded/posix"]
+    assert [r["ack_window"] for r in ded] == list(fig7_shard.ACK_WINDOWS)
+    sat = [r for r in rows if r["workload"] == "CN-W/posix"
+           and r["ack_window"] != ""]
+    assert sorted(r["ack_window"] for r in sat) \
+        == [0, fig7_shard.ACK_WINDOWS[-1]]
+    assert all("rpc_msgs" in r and r["rpc_msgs"] >= 1 for r in rows)
+    # Fire-and-forget pays on the latency-bound dedicated writers even
+    # at smoke scale (the config is grid-independent).
+    by_ack = {r["ack_window"]: r["read_bw"] for r in ded}
+    assert by_ack[fig7_shard.ACK_WINDOWS[-1]] \
+        >= 1.5 * by_ack[0]
 
 
 def test_fig8_seed_reproducible(monkeypatch):

@@ -79,17 +79,90 @@ def test_batch_closes_midphase_between_barriers():
     assert rec.response < rec.chain_arrival
 
 
-def test_linger_timer_fires_midphase_before_last_member():
-    # A tiny window expires while members are still joining: the send is
-    # clamped to the LAST member (batch content is execution-decided; the
-    # DES never back-dates a flush before a coalesced member).
+def test_linger_timer_expiry_resplits_batch_membership():
+    # A tiny window expires between every pair of members: batch
+    # membership is TIME-decided, so the DES re-splits the ledger-order
+    # batch into one sub-batch message per member — the expired prefix
+    # departs at its own timer instead of the whole batch being clamped
+    # to the last member (the pre-PR-5 mis-modeling).
     fs = _ckpt_run(linger=1e-6)
     ft = []
     CostModel().replay(fs.ledger, flush_trace=ft)
     (rec,) = ft
     assert rec.opened + rec.event.linger < rec.last_member
-    assert rec.send == rec.last_member
+    # 8 members, every gap exceeds the window: 8 singleton sub-batches.
+    assert rec.splits == len(rec.event.members) == 8
+    # The first sub-batch departs at ITS OWN expiry, mid-phase, long
+    # before the last member was even issued; later sub-batches depart
+    # in order, each no earlier than its member's enqueue clock.
+    assert rec.send == rec.sends[0]
+    assert rec.sends[0] == pytest.approx(rec.opened + rec.event.linger)
+    assert rec.sends[0] < rec.last_member
+    assert all(a < b for a, b in zip(rec.sends, rec.sends[1:]))
+    assert rec.sends[-1] >= rec.last_member
     assert rec.send < rec.chain_arrival
+
+
+def test_barrier_close_priced_at_barrier_entry_not_timer_expiry():
+    """Satellite regression: barrier/drain closes are forced when the
+    CLIENT enters the barrier (its chain at the flush slot), not at the
+    raw timer expiry PR 3 used as a conservative stand-in.  A writer
+    with a huge linger window that reaches the barrier early must not
+    have its tail batch — and the phase — held until the timer."""
+    def run(linger):
+        fs = BaseFS(batch=64, linger=linger)
+        pfs = make_fs("posix", fs)
+        fh = pfs.open(0, "/tail", node=0)
+        fs.ledger.mark_phase("write")
+        for j in range(4):
+            pfs.seek(fh, j * 8 * KB)
+            pfs.write(fh, b"w" * 8 * KB)
+        fs.ledger.mark_phase("end")
+        fs.drain()
+        ft = []
+        phases = CostModel().replay(fs.ledger, flush_trace=ft)
+        (rec,) = ft
+        assert rec.event.flush == "barrier"
+        return rec, next(p for p in phases if p.name == "write")
+
+    rec, write = run(linger=5000e-6)
+    # Sound bounds: never before the last member, never after the old
+    # (PR-3) conservative stand-in — the bound is tightened, not broken.
+    assert rec.send >= rec.last_member
+    assert rec.send <= rec.opened + rec.event.linger
+    # The tightened price: the client entered the barrier long before
+    # the 5ms timer would have fired, so the batch departs right there.
+    assert rec.send == rec.chain_arrival
+    assert rec.send < rec.opened + rec.event.linger
+    # And the phase no longer scales with the unexpired window: any
+    # barrier-forced window prices identically.
+    _rec2, write2 = run(linger=2000e-6)
+    assert write.duration == write2.duration
+    assert write.duration < 2000e-6
+
+
+def test_drain_close_priced_at_drain_entry():
+    # Same tightening for the end-of-run drain (FLUSH_CLOSE).
+    def run(linger):
+        fs = BaseFS(batch=64, linger=linger)
+        pfs = make_fs("posix", fs)
+        fh = pfs.open(0, "/tail", node=0)
+        fs.ledger.mark_phase("write")
+        for j in range(4):
+            pfs.seek(fh, j * 8 * KB)
+            pfs.write(fh, b"w" * 8 * KB)
+        fs.drain()
+        ft = []
+        phases = CostModel().replay(fs.ledger, flush_trace=ft)
+        (rec,) = ft
+        assert rec.event.flush == "close"
+        return rec, sum(p.duration for p in phases)
+
+    rec, dur = run(linger=5000e-6)
+    assert rec.last_member <= rec.send == rec.chain_arrival
+    assert rec.send < rec.opened + rec.event.linger
+    _rec2, dur2 = run(linger=2000e-6)
+    assert dur == dur2
 
 
 def test_fig7_ckpt_sweep_config_closes_midphase():
@@ -309,12 +382,15 @@ def _edge_cost_check(script, batch, shards, linger):
     fs = BaseFS(batch=batch, num_shards=shards, linger=linger)
     _apply_script(fs, script)
     cm = CostModel()
-    order, t_full, t_base = [], [], []
-    full = cm.replay(fs.ledger, trace=t_full, record_order=order)
-    # Forced-order counterfactual: the SAME realized schedule with the
-    # edge waits removed — pointwise a lower bound (max-plus argument).
+    order, splits, t_full, t_base = [], {}, [], []
+    full = cm.replay(fs.ledger, trace=t_full, record_order=order,
+                     record_splits=splits)
+    # Forced-order counterfactual: the SAME realized schedule AND the
+    # same timer-split plan with the edge waits removed — pointwise a
+    # lower bound (max-plus argument; recomputing splits under relaxed
+    # costs could change the sub-batch message structure and void it).
     base = cm.replay(fs.ledger, trace=t_base, exec_order=order,
-                     honor_edges=False)
+                     exec_splits=splits, honor_edges=False)
     for (e1, _s1, f1), (e2, _s2, f2) in zip(t_full, t_base):
         assert e1.seq == e2.seq
         assert f1 >= f2 - 1e-15

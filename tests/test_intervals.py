@@ -115,6 +115,29 @@ class TestIntervalMapProperty:
             else:
                 assert got == [], p
 
+    @settings(max_examples=150, deadline=None)
+    @given(st.lists(
+        st.tuples(
+            st.integers(0, 3),
+            st.lists(st.tuples(st.integers(0, 180), st.integers(1, 40)),
+                     min_size=1, max_size=6),
+        ),
+        min_size=1, max_size=25,
+    ))
+    def test_insert_run_matches_sequential_inserts(self, batches):
+        """The windowed bulk splice == per-piece inserts, for any input
+        (ascending-disjoint takes the fast path, the rest fall back)."""
+        bulk, loop = IntervalMap(), IntervalMap()
+        for value, raw in batches:
+            runs = [(a, a + ln) for a, ln in raw]
+            bulk.insert_run(runs, value)
+            for a, b in runs:
+                loop.insert(a, b, value)
+            bulk.check_invariants()
+            got = [(iv.start, iv.end, iv.value) for iv in bulk]
+            want = [(iv.start, iv.end, iv.value) for iv in loop]
+            assert got == want
+
     @settings(max_examples=100, deadline=None)
     @given(_ops())
     def test_query_always_disjoint_sorted(self, ops):

@@ -122,3 +122,57 @@ def test_buffer_map_windowed_merge_matches_semantics():
                 and a.value.attached == b.value.attached
                 and a.value.buf_start + a.length == b.value.buf_start
             ), f"unmerged neighbours {a} {b}"
+
+
+def _random_ascending_runs(rng, lo=0, hi=SPACE, max_runs=8):
+    """Ascending, non-overlapping (possibly contiguous) runs in [lo, hi)."""
+    runs = []
+    pos = lo
+    for _ in range(rng.randrange(1, max_runs + 1)):
+        if pos >= hi - 1:
+            break
+        start = rng.randrange(pos, hi - 1)
+        end = rng.randrange(start + 1, min(start + 48, hi) + 1)
+        runs.append((start, end))
+        pos = end + rng.randrange(0, 8)
+    return runs
+
+
+def test_attach_many_matches_per_range_attach_randomized():
+    """The single-windowed-splice bulk attach (the sharded server's
+    multi-range RPC hot path) is semantically identical to attaching
+    each range in order."""
+    rng = random.Random(4242)
+    bulk, loop = OwnerIntervalMap(), OwnerIntervalMap()
+    for step in range(600):
+        owner = rng.randrange(0, 8)
+        runs = _random_ascending_runs(rng)
+        bulk.attach_many(runs, owner)
+        for start, end in runs:
+            loop.attach(start, end, owner)
+        bulk.check_invariants()
+        assert _runs(bulk.owners(0, SPACE)) == _runs(loop.owners(0, SPACE)), (
+            f"step {step}: bulk attach diverged on {runs}"
+        )
+        assert bulk.max_end == loop.max_end
+
+
+def test_attach_many_overlapping_input_falls_back():
+    # Non-ascending / overlapping inputs take the per-piece path and
+    # keep last-writer-wins insert semantics.
+    bulk, loop = OwnerIntervalMap(), OwnerIntervalMap()
+    runs = [(10, 30), (20, 40), (0, 15)]
+    bulk.attach_many(runs, 5)
+    for start, end in runs:
+        loop.attach(start, end, 5)
+    assert _runs(bulk.owners(0, SPACE)) == _runs(loop.owners(0, SPACE))
+
+
+def test_attach_many_splits_existing_owners_once():
+    m = OwnerIntervalMap()
+    m.attach(0, 100, 1)
+    m.attach_many([(10, 20), (20, 30), (50, 60)], 2)
+    assert _runs(m.owners(0, 100)) == [
+        (0, 10, 1), (10, 30, 2), (30, 50, 1), (50, 60, 2), (60, 100, 1),
+    ]
+    m.check_invariants()

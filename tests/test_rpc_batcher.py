@@ -231,6 +231,33 @@ class TestVirtualClockMetadata:
         assert attach.last_after == writes[-1].seq
         assert attach.linger == DEFAULT_LINGER
 
+    def test_flush_carries_per_member_anchors(self):
+        # Time-driven membership: the flushed event records one
+        # (anchor, nranges) pair per coalesced call so the DES can
+        # re-split the batch at timer expiries between members.
+        fs = BaseFS(batch=16)
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        for _ in range(4):
+            pfs.write(fh, b"x" * 64)
+        fs.drain()
+        writes = [e for e in fs.ledger.events
+                  if e.kind is EventKind.SSD_WRITE]
+        (attach,) = _rpc_events(fs, "attach")
+        assert [a for a, _nr in attach.members] == [w.seq for w in writes]
+        assert sum(nr for _a, nr in attach.members) == attach.rpc_ranges
+        assert len(attach.members) == attach.rpc_calls
+        # Aggregate anchors stay consistent with the member list.
+        assert attach.members[0][0] == attach.opened_after
+        assert attach.members[-1][0] == attach.last_after
+
+    def test_unqueued_events_carry_no_members(self):
+        fs = BaseFS()  # batch=0: pass-through
+        pfs = PosixFS(fs)
+        fh = pfs.open(0, "/f")
+        pfs.write(fh, b"x" * 64)
+        assert all(e.members == () for e in fs.ledger.events)
+
     def test_first_ever_action_anchors_to_phase_start(self):
         fs = BaseFS(batch=16)
         c = fs.client(0)
