@@ -18,7 +18,7 @@ FMT_PATHS := benchmarks/__init__.py \
 	src/repro/core/extents.py
 
 .PHONY: test test-fast lint bench bench-fig7 bench-fig8 bench-smoke \
-	perf perf-full
+	perf perf-full analyze analyze-smoke
 
 # Tier-1 verification target (same invocation as ROADMAP.md).
 test:
@@ -59,6 +59,18 @@ bench-fig8:
 # One minimal point per figure through the benchmarks.run machinery.
 bench-smoke:
 	$(PYTHON) -m pytest -x -q tests/test_bench_smoke.py
+
+# Static-analysis gate (blocking in CI): DES-invariant lint + fast-grid
+# race checks of every figure's traces + a small seeded litmus fuzz.
+analyze-smoke:
+	$(PYTHON) -m repro.analysis --smoke
+
+# Full-grid race analysis: every figure at paper scale (fig7/fig8 at
+# 2048 clients), every applicable layer, plus a 200-program fuzz.
+# Writes the report to ANALYSIS.txt (the non-blocking CI artifact).
+analyze:
+	$(PYTHON) -m repro.analysis --fig all --full --fuzz 200 --minimize \
+		--lint --out ANALYSIS.txt
 
 # Wall-clock / peak-RSS harness (BENCH_pr5.json): fast grid, both data
 # planes (extent vs byte-moving materialize).  BENCH_pr4.json is the

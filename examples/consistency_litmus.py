@@ -1,66 +1,57 @@
 """Storage-model litmus programs + the executable race checker (paper §4).
 
     PYTHONPATH=src python examples/consistency_litmus.py
+    PYTHONPATH=src python examples/consistency_litmus.py --fuzz 200
+    PYTHONPATH=src python examples/consistency_litmus.py --fuzz 50 --minimize
 
-Runs the same two-process program on each consistency layer, prints what
-the reader observes, then asks the formal checker whether the program was
-*properly synchronized* for that model — demonstrating the SCNF contract:
-race-free programs get sequentially consistent results; racy programs get
-whatever the buffers hold.
+The default mode generates seeded litmus programs with the fuzzer
+(:mod:`repro.analysis.litmus`), runs each on all four consistency
+layers, and cross-checks the race detector against the SC oracle — the
+SCNF contract: race-free programs get sequentially consistent results;
+racy programs get whatever the buffers hold.  ``--minimize`` also
+delta-debugs a sample of racy programs down to their minimal racy core
+and prints them — machine-generated litmus tests.  ``--zoo`` prints the
+Table-4 model specs.
 """
 
-from repro.core.checker import TracedRun
-from repro.core.consistency import CommitFS, SessionFS
-from repro.core.model import COMMIT_MODEL, MODELS, SESSION_MODEL
+import argparse
+import random
 
-F = "/litmus"
-
-
-def commit_with_and_without_sync() -> None:
-    print("== commit consistency: write -> [commit?] -> barrier -> read ==")
-    for do_commit in (False, True):
-        run = TracedRun(CommitFS())
-        w = run.open(0, F, node=0)
-        run.write_at(0, w, 0, b"DATA")
-        if do_commit:
-            run.commit(0, w)
-        run.barrier([0, 1])
-        r = run.open(1, F, node=1)
-        run.read_at(1, r, 0, 4)
-        race_free, races, violations = run.verify_scnf(COMMIT_MODEL)
-        print(f"  commit={do_commit}: read {run.reads[0].actual!r}, "
-              f"properly synchronized={race_free}, "
-              f"SC violations={len(violations)}")
+from repro.analysis.litmus import (
+    FUZZ_MODELS, ddmin, format_program, fuzz, gen_program, run_litmus)
+from repro.core.model import MODELS
 
 
-def session_close_to_open() -> None:
-    print("\n== session consistency: visibility is CLOSE-TO-OPEN ==")
-    run = TracedRun(SessionFS())
-    w = run.open(0, F, node=0)
-    run.session_open(0, w)
-    run.write_at(0, w, 0, b"DATA")
-    r = run.open(1, F, node=1)
-    run.session_open(1, r)          # opened BEFORE the writer closed
-    run.session_close(0, w)
-    run.barrier([0, 1])
-    run.read_at(1, r, 0, 4)
-    race_free, *_ = run.verify_scnf(SESSION_MODEL)
-    print(f"  open-before-close: read {run.reads[0].actual!r} "
-          f"(stale ok: program is racy -> {race_free=})")
+def fuzz_mode(n: int, seed: int, minimize: bool) -> int:
+    print(f"== seeded litmus fuzz: {n} programs, seed={seed}, "
+          f"layers={'/'.join(FUZZ_MODELS)} ==")
+    res = fuzz(n=n, seed=seed, minimize=minimize)
+    print(res.summary())
+    for d in res.disagreements:
+        print(d)
+    if minimize and res.ok:
+        # Nothing to minimize (the theorem held) — demonstrate the
+        # minimizer on racy programs instead: shrink each to the
+        # smallest program that still races under its model.
+        print("\n== minimized racy cores (ddmin demo) ==")
+        rng = random.Random(seed)
+        shown = 0
+        while shown < 3:
+            prog = gen_program(rng)
+            for model in FUZZ_MODELS:
+                spec = MODELS[model]
+                if not run_litmus(prog, model).storage_races(spec):
+                    continue
 
-    run2 = TracedRun(SessionFS())
-    w = run2.open(0, F, node=0)
-    run2.session_open(0, w)
-    run2.write_at(0, w, 0, b"DATA")
-    run2.session_close(0, w)
-    run2.barrier([0, 1])
-    r = run2.open(1, F, node=1)
-    run2.session_open(1, r)         # opened AFTER the close
-    run2.read_at(1, r, 0, 4)
-    race_free, races, violations = run2.verify_scnf(SESSION_MODEL)
-    print(f"  close-then-open:   read {run2.reads[0].actual!r}, "
-          f"properly synchronized={race_free}, "
-          f"SC violations={len(violations)}")
+                def still_racy(p, m=model, s=spec):
+                    return bool(run_litmus(p, m).storage_races(s))
+
+                small = ddmin(prog, still_racy)
+                print(f"[{model}] {len(prog)} steps -> {len(small)}:")
+                print(format_program(small))
+                shown += 1
+                break
+    return 0 if res.ok else 1
 
 
 def model_zoo() -> None:
@@ -76,12 +67,6 @@ def model_zoo() -> None:
 
 
 def _interleave(edges, kinds):
-    out = []
-    for i, e in enumerate(edges):
-        out.append((e, frozenset()))
-        if i < len(kinds):
-            out.append((e, kinds[i]))
-    # pair (edge, kind) stream for printing: edge kind edge kind ... edge
     res = []
     for i in range(len(edges) + len(kinds)):
         if i % 2 == 0:
@@ -91,11 +76,21 @@ def _interleave(edges, kinds):
     return res
 
 
-def main() -> None:
-    commit_with_and_without_sync()
-    session_close_to_open()
-    model_zoo()
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fuzz", type=int, metavar="N", default=20,
+                    help="number of seeded litmus programs (default 20)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--minimize", action="store_true",
+                    help="delta-debug racy programs to minimal cores")
+    ap.add_argument("--zoo", action="store_true",
+                    help="also print the Table-4 model specs")
+    args = ap.parse_args(argv)
+    rc = fuzz_mode(args.fuzz, args.seed, args.minimize)
+    if args.zoo:
+        model_zoo()
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -51,6 +51,7 @@ class TracedRun:
         self.reads: List[_ReadRecord] = []
         self.write_data: Dict[int, bytes] = {}  # op_id -> payload
         self.initial: Dict[str, bytes] = {}      # preloaded PFS content
+        self._barriers = 0
 
     # ------------------------------------------------------------- lifecycle
     def preload_pfs(self, path: str, data: bytes) -> None:
@@ -111,20 +112,32 @@ class TracedRun:
         return self.exe.sync(pid, fh.path, "file_sync")
 
     # --------------------------------------------------- program-level sync
+    #: Barrier hubs live on their own process ids, far outside any real
+    #: pid a test program would use.
+    _HUB_PID_BASE = -1_000_000
+
     def barrier(self, pids: Sequence[int]) -> List[Op]:
         """MPI_Barrier among ``pids``.
 
-        Modeled as an enter/leave pair per process with so edges
-        enter_i -> leave_j (i != j): everything po-before any enter
-        happens-before everything po-after any leave, and po ∪ so stays
-        acyclic (a single rank of pairwise edges would be a cycle).
+        Hub-encoded: enter_i --so--> hub --so--> leave_i, with the hub a
+        single sync op on a dedicated process — everything po-before any
+        enter happens-before everything po-after any leave, exactly as
+        with pairwise enter_i -> leave_j edges, but with O(P) edges
+        instead of O(P²) (and one shared vector-clock snapshot for all
+        the leaves; see :mod:`repro.analysis.vectorclock`).  po ∪ so
+        stays acyclic: every edge points forward in creation order.
         """
+        hub_pid = self._HUB_PID_BASE - self._barriers
+        self._barriers += 1
         enters = [self.exe.sync(pid, "", "barrier_enter") for pid in pids]
-        leaves = [self.exe.sync(pid, "", "barrier_leave") for pid in pids]
+        hub = self.exe.sync(hub_pid, "", "barrier_hub")
         for e in enters:
-            for lv in leaves:
-                if e.pid != lv.pid:
-                    self.exe.add_so(e, lv)
+            self.exe.add_so(e, hub)
+        leaves = []
+        for pid in pids:
+            lv = self.exe.sync(pid, "", "barrier_leave")
+            self.exe.add_so(hub, lv)
+            leaves.append(lv)
         return leaves
 
     def send_recv(self, src: int, dst: int) -> Tuple[Op, Op]:

@@ -21,7 +21,7 @@ owners are split along the owner intervals returned by the query.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.basefs import SEEK_SET, BaseFS, BFSClient
 from repro.core.extents import Payload, concat
@@ -79,6 +79,14 @@ class _LayeredFS:
     #: ``GlobalServer.query``/``query_file``/``stat_eof``; this
     #: attribute documents which layer operations reach them.
     consumer_edges: Tuple[str, ...] = ("stat_size",)
+    #: Formal fence class of every layer sync method: layer API call →
+    #: Table-4 sync-op kind.  This is what the race analyzer records
+    #: when it lifts a run into an :class:`~repro.core.model.Execution`
+    #: (see :mod:`repro.analysis.trace`), and the DES-invariant lint
+    #: (:mod:`repro.analysis.lint`) requires every registered layer to
+    #: declare it explicitly — an empty dict is PosixFS asserting
+    #: "S = ∅", not an omission.
+    sync_op_kinds: Dict[str, str] = {}
 
     def __init__(self, fs: Optional[BaseFS] = None) -> None:
         self.fs = fs or BaseFS()
@@ -173,6 +181,7 @@ class PosixFS(_LayeredFS):
     name = "posix"
     sync_points = ("close",)
     consumer_edges = ("read", "stat_size")  # query per read
+    sync_op_kinds = {}  # S = ∅ (paper Table 4): hb alone synchronizes
 
     def write(self, fh: FileHandle, data: bytes) -> int:
         fs, c, h = self.fs, fh.client, fh.bfs_handle
@@ -194,6 +203,7 @@ class CommitFS(_LayeredFS):
     name = "commit"
     sync_points = ("commit", "close")
     consumer_edges = ("read", "stat_size")  # query per read
+    sync_op_kinds = {"commit": "commit"}
 
     def write(self, fh: FileHandle, data: bytes) -> int:
         return self.fs.bfs_write(fh.client, fh.bfs_handle, data)
@@ -229,6 +239,10 @@ class SessionFS(_LayeredFS):
     # session_open snapshot, so only the opening query blocks on
     # in-flight writer flushes.
     consumer_edges = ("session_open", "stat_size")
+    sync_op_kinds = {
+        "session_open": "session_open",
+        "session_close": "session_close",
+    }
 
     def session_open(self, fh: FileHandle) -> None:
         owners = self.fs.bfs_query_file(fh.client, fh.bfs_handle)
@@ -271,6 +285,11 @@ class MPIIOFS(_LayeredFS):
     name = "mpiio"
     sync_points = ("file_sync", "file_close", "close")
     consumer_edges = ("file_open", "file_sync", "stat_size")
+    sync_op_kinds = {
+        "file_open": "file_open",
+        "file_close": "file_close",
+        "file_sync": "file_sync",
+    }
 
     def file_open(self, client_id: int, path: str,
                   node: Optional[int] = None,

@@ -27,7 +27,7 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass
 from enum import Enum
-from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Set, Tuple
 
 
 class OpType(Enum):
@@ -178,7 +178,12 @@ class Execution:
         self.so_edges: List[Tuple[int, int]] = []  # (op_id, op_id)
         self._op_counter = itertools.count()
         self._seq: Dict[int, itertools.count] = {}
-        self._hb: Optional[List[Set[int]]] = None  # reachability sets, lazy
+        # Lazy vector-clock hb index (repro.analysis.vectorclock).  It
+        # holds live references to ``ops``/``so_edges`` and re-syncs
+        # incrementally at query time, so ``add``/``add_so`` never
+        # invalidate it wholesale — see the hb() docstring for the
+        # contract.
+        self._vc = None
 
     # ---- construction ----
     def _next_seq(self, pid: int) -> int:
@@ -191,7 +196,6 @@ class Execution:
             start, end, kind,
         )
         self.ops.append(op)
-        self._hb = None
         return op
 
     def read(self, pid: int, obj: str, start: int, end: int) -> Op:
@@ -208,7 +212,6 @@ class Execution:
         if a.pid == b.pid:
             raise ValueError("so edges connect distinct processes")
         self.so_edges.append((a.op_id, b.op_id))
-        self._hb = None
 
     # ---- orders ----
     def po(self, a: Op, b: Op) -> bool:
@@ -219,6 +222,10 @@ class Execution:
 
         po ∪ so must be acyclic (so is consistent with po by definition);
         we verify acyclicity while sorting.
+
+        This is the O(n²) *reference* oracle: ``hb()`` answers through
+        the vector-clock index instead, and the golden/property tests in
+        ``tests/test_vectorclock.py`` pin the two equal.
         """
         n = len(self.ops)
         succ: List[List[int]] = [[] for _ in range(n)]
@@ -254,9 +261,28 @@ class Execution:
         return reach
 
     def hb(self, a: Op, b: Op) -> bool:
-        if self._hb is None:
-            self._hb = self._build_hb()
-        return b.op_id in self._hb[a.op_id]
+        """a happens-before b (transitive po ∪ so).
+
+        Answered by the incremental vector-clock index
+        (:class:`repro.analysis.vectorclock.VectorClockIndex`): the
+        first query pays one linear pass; ``add`` extends the index
+        lazily and ``add_so`` re-derives at most the suffix from the
+        edge's target onward, so interleaving construction with queries
+        never rebuilds the full index (the closure-cache footgun this
+        replaces).  ``hb_stats()`` exposes the pass counters.
+        """
+        if a.pid == b.pid:
+            return a.seq < b.seq
+        if self._vc is None:
+            from repro.analysis.vectorclock import VectorClockIndex
+            self._vc = VectorClockIndex(self.ops, self.so_edges)
+        return self._vc.hb(a, b)
+
+    def hb_stats(self) -> Dict[str, int]:
+        """Vector-clock index counters (zeros before the first query)."""
+        if self._vc is None:
+            return {"ops_indexed": 0, "ops_processed": 0, "full_builds": 0}
+        return self._vc.stats()
 
     # ---- MSC matching ----
     def _edge_holds(self, kind: EdgeKind, a: Op, b: Op) -> bool:

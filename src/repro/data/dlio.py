@@ -53,9 +53,14 @@ class PreloadedStore:
                  sample_bytes: int = 116 * 1024,
                  procs_per_host: int = 4,
                  fs: Optional[BaseFS] = None,
-                 samples: Optional[List[np.ndarray]] = None) -> None:
+                 samples: Optional[List[np.ndarray]] = None,
+                 tracer=None) -> None:
         self.fs = fs or BaseFS()
         self.layer = make_fs(model, self.fs)
+        if tracer is not None:
+            # Lift every layer call into the formal execution for race
+            # analysis (repro.analysis.trace); the run is unchanged.
+            self.layer = tracer.attach(self.layer)
         self.model = model
         self.H = num_hosts
         self.P = procs_per_host

@@ -108,10 +108,15 @@ def _ckpt_path(rank: int) -> str:
 
 def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
             verify: bool = True,
-            timings: Optional[Dict[str, float]] = None) -> SCRResult:
+            timings: Optional[Dict[str, float]] = None,
+            tracer=None) -> SCRResult:
     t0 = _time.perf_counter()
     fs = BaseFS()
     layer = make_fs(cfg.model, fs)
+    if tracer is not None:
+        # Lift the run into the formal execution (repro.analysis.trace);
+        # the proxy delegates every call, the run is unchanged.
+        layer = tracer.attach(layer)
     ledger = fs.ledger
     ranks = cfg.ranks
     p = cfg.p

@@ -269,8 +269,8 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  adaptive: Optional[bool] = None,
                  materialize: Optional[bool] = None,
                  ack_window: Optional[int] = None,
-                 timings: Optional[Dict[str, float]] = None
-                 ) -> WorkloadResult:
+                 timings: Optional[Dict[str, float]] = None,
+                 tracer=None) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
@@ -285,6 +285,10 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
     the default (extent) data plane, real byte round-trips under
     ``materialize=True``.  ``timings``, if given, receives ``exec_s``
     (BaseFS execution), ``replay_s`` (DES pricing) and ``events``.
+
+    ``tracer`` (an :class:`repro.analysis.trace.ExecutionTracer`)
+    optionally lifts the run into the paper's formal execution for race
+    analysis; the run itself is unchanged (the proxy only observes).
     """
     t0 = _time.perf_counter()
     if fs is None:
@@ -292,6 +296,8 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                     adaptive=adaptive, materialize=materialize,
                     ack_window=ack_window)
     layer = make_fs(cfg.model, fs)
+    if tracer is not None:
+        layer = tracer.attach(layer)
     ledger = fs.ledger
 
     # ---- write phase ----------------------------------------------------

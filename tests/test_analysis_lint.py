@@ -1,0 +1,76 @@
+"""Tests for the DES-invariant AST lint (:mod:`repro.analysis.lint`)."""
+
+from repro.analysis.lint import lint_source, run_lint
+
+
+def test_repo_is_lint_clean():
+    assert run_lint() == []
+
+
+# ----------------------------------------------------------------- ANA001
+def test_ana001_flags_direct_bfs_calls_outside_layers():
+    src = ("def f(fs):\n"
+           "    fs.bfs_attach('/x', 1)\n"
+           "    bfs_query('/x')\n"
+           "    fs.bfs_query_file('/x')\n")
+    v = lint_source(src, "benchmarks/foo.py")
+    assert [x.rule for x in v] == ["ANA001"] * 3
+    assert v[0].line == 2
+    assert "consistency" in v[0].message
+
+
+def test_ana001_allowed_in_the_layer_modules():
+    src = "def f(fs):\n    fs.bfs_attach('/x', 1)\n"
+    assert lint_source(src, "src/repro/core/consistency.py") == []
+    assert lint_source(src, "src/repro/core/basefs.py") == []
+
+
+# ----------------------------------------------------------------- ANA002
+def test_ana002_missing_declarations():
+    src = "class BadFS(_LayeredFS):\n    name = 'bad'\n"
+    v = lint_source(src, "src/repro/core/consistency.py")
+    assert {x.rule for x in v} == {"ANA002"}
+    missing = {m.split("'")[1] for m in (x.message for x in v)}
+    assert missing == {"sync_points", "consumer_edges", "sync_op_kinds"}
+
+
+def test_ana002_sync_op_kind_without_method():
+    src = ("class BadFS(_LayeredFS):\n"
+           "    name = 'bad'\n"
+           "    sync_points = ()\n"
+           "    consumer_edges = ()\n"
+           "    sync_op_kinds = {'commit': 'commit'}\n")
+    v = lint_source(src, "src/repro/core/consistency.py")
+    assert len(v) == 1 and v[0].rule == "ANA002"
+    assert "commit" in v[0].message
+    good = src + "    def commit(self, fh):\n        pass\n"
+    assert lint_source(good, "src/repro/core/consistency.py") == []
+
+
+def test_ana002_only_checked_in_consistency_module():
+    src = "class OtherFS(_LayeredFS):\n    pass\n"
+    assert lint_source(src, "src/repro/io/foo.py") == []
+
+
+# ----------------------------------------------------------------- ANA003
+def test_ana003_flags_hand_recorded_rpc():
+    src = ("from repro.core.basefs import EventKind\n"
+           "def f(ledger):\n"
+           "    ledger.record(EventKind.RPC, 0, 1)\n")
+    v = lint_source(src, "src/repro/io/foo.py")
+    assert [x.rule for x in v] == ["ANA003"]
+    assert lint_source(src, "src/repro/core/basefs.py") == []
+
+
+def test_ana003_other_event_kinds_pass():
+    src = ("from repro.core.basefs import EventKind\n"
+           "def f(ledger):\n"
+           "    ledger.record(EventKind.ATTACH, 0, 1)\n")
+    assert lint_source(src, "src/repro/io/foo.py") == []
+
+
+# ------------------------------------------------------------------- misc
+def test_violation_formatting():
+    v = lint_source("bfs_query('/f')\n", "examples/demo.py")[0]
+    s = str(v)
+    assert s.startswith("examples/demo.py:1: ANA001")

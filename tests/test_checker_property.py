@@ -18,10 +18,10 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.checker import TracedRun
-from repro.core.consistency import CommitFS, SessionFS
+from repro.core.consistency import CommitFS, MPIIOFS, SessionFS
 from repro.core.model import (
-    COMMIT_MODEL, COMMIT_RELAXED_MODEL, MODELS, POSIX_MODEL, SESSION_MODEL,
-    Execution, MSC)
+    COMMIT_MODEL, COMMIT_RELAXED_MODEL, MODELS, MPIIO_MODEL, POSIX_MODEL,
+    SESSION_MODEL, Execution, MSC)
 
 F = "/prop"
 
@@ -95,6 +95,57 @@ def test_session_scnf_guarantee(prog):
     assert violations == [], violations
 
 
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_mpiio_scnf_guarantee(prog):
+    """writers write+file_sync; barrier; readers file_open+file_sync+read.
+
+    Table 4: s1 ∈ {close, sync} po-after the write, s2 ∈ {sync, open}
+    po-before the read, hb(s1, s2) via the barrier -> SC must hold.
+    """
+    writers, reads = prog
+    run = TracedRun(MPIIOFS())
+    for w, ws in writers.items():
+        fh = run.open(w, F, node=w)  # records the file_open sync op
+        for start, ln in ws:
+            run.write_at(w, fh, start, _payload(w, start, ln))
+        run.file_sync(w, fh)
+    pids = list(writers) + [100 + r for r in range(len(reads))]
+    run.barrier(pids)
+    for r, (start, ln) in enumerate(reads):
+        fh = run.open(100 + r, F, node=10 + r)
+        run.file_sync(100 + r, fh)
+        run.read_at(100 + r, fh, start, ln)
+    race_free, races, violations = run.verify_scnf(MPIIO_MODEL)
+    assert race_free, races
+    assert violations == [], violations
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 40), st.integers(1, 16))
+def test_mpiio_missing_writer_sync_is_a_race(start, ln):
+    """open/write/barrier/read without the writer's file_sync or
+    file_close: no s1 po-after the write -> storage race under MPIIO."""
+    run = TracedRun(MPIIOFS())
+    fh = run.open(0, F, node=0)
+    run.write_at(0, fh, start, _payload(0, start, ln))
+    run.barrier([0, 1])
+    rh = run.open(1, F, node=1)
+    run.read_at(1, rh, start, ln)
+    assert run.exe.storage_races(MPIIO_MODEL)
+    # Closing on the writer's side repairs it (file_close ∈ s1).
+    run2 = TracedRun(MPIIOFS())
+    fh = run2.open(0, F, node=0)
+    run2.write_at(0, fh, start, _payload(0, start, ln))
+    run2.close(0, fh)
+    run2.barrier([0, 1])
+    rh = run2.open(1, F, node=1)
+    run2.read_at(1, rh, start, ln)
+    race_free, races, violations = run2.verify_scnf(MPIIO_MODEL)
+    assert race_free, races
+    assert violations == [], violations
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.integers(0, 40), st.integers(1, 16))
 def test_commit_missing_sync_is_a_race(start, ln):
@@ -160,6 +211,36 @@ def test_msc_shape_validation():
     import pytest
     with pytest.raises(ValueError):
         MSC(sync_kinds=(frozenset({"commit"}),), edges=("po",))  # type: ignore
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),
+                          st.sampled_from(["w", "r", "s"]),
+                          st.integers(0, 30), st.integers(1, 8)),
+                min_size=2, max_size=24),
+       st.data())
+def test_vectorclock_hb_matches_reference_closure(steps, data):
+    """Execution.hb answers through the vector-clock index; the O(n²)
+    closure builder stays as the oracle.  They must agree exactly."""
+    exe = Execution()
+    syncs = []
+    for pid, kind, a, b in steps:
+        if kind == "w":
+            exe.write(pid, F, a, a + b)
+        elif kind == "r":
+            exe.read(pid, F, a, a + b)
+        else:
+            s = exe.sync(pid, "", "m")
+            peers = [x for x in syncs if x.pid != pid]
+            if peers and data.draw(st.booleans()):
+                exe.add_so(data.draw(st.sampled_from(peers)), s)
+            syncs.append(s)
+    reach = exe._build_hb()
+    for x in exe.ops:
+        for y in exe.ops:
+            if x is not y:
+                assert exe.hb(x, y) == (y.op_id in reach[x.op_id])
+    assert exe.hb_stats()["full_builds"] == 0
 
 
 @settings(max_examples=30, deadline=None)

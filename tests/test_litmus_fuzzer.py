@@ -1,0 +1,82 @@
+"""Tests for the seeded litmus fuzzer + ddmin minimizer.
+
+The acceptance bar from the issue: 200 seeded programs across all four
+layers, zero detector-vs-oracle disagreements.  Plus: generator
+determinism, executor robustness on arbitrary ddmin slices, and ddmin
+1-minimality on a known-racy program.
+"""
+
+import random
+
+from repro.analysis.litmus import (
+    FUZZ_MODELS, check_program, ddmin, format_program, fuzz, gen_program,
+    run_litmus)
+from repro.core.model import MODELS
+
+
+def test_fuzz_acceptance_200_programs_zero_disagreements():
+    res = fuzz(n=200, seed=0)
+    assert res.ok, "\n".join(str(d) for d in res.disagreements)
+    assert res.programs == 200
+    assert res.runs == 200 * len(FUZZ_MODELS)
+    # The generator must exercise BOTH detector outcomes.
+    assert 0 < res.race_free_runs < res.runs
+    assert "OK" in res.summary()
+
+
+def test_gen_program_is_seed_deterministic():
+    assert gen_program(random.Random(5)) == gen_program(random.Random(5))
+    progs = [gen_program(random.Random(0)) for _ in range(3)]
+    assert progs[0] == progs[1] == progs[2]
+
+
+def test_run_litmus_robust_on_arbitrary_slices():
+    """ddmin feeds run_litmus arbitrary subsequences: unmatched recvs,
+    single-pid barriers, fences with no prior write must all be legal."""
+    prog = [(0, ("recv", 3)), (0, ("barrier",)), (1, ("sync2",)),
+            (0, ("sync1",)), (0, ("w", 0, 4)), (1, ("send", 9))]
+    for model in FUZZ_MODELS:
+        run_litmus(prog, model)
+    for model in FUZZ_MODELS:
+        for i in range(len(prog)):
+            run_litmus(prog[:i] + prog[i + 1:], model)
+
+
+def test_race_free_program_on_every_layer():
+    """w -> fence1 -> barrier -> fence2 -> r is properly synchronized
+    under each layer's own model, so check_program must report clean."""
+    prog = [(0, ("w", 0, 8)), (0, ("sync1",)), (0, ("barrier",)),
+            (1, ("sync2",)), (1, ("r", 0, 8))]
+    for model in FUZZ_MODELS:
+        failure, race_free = check_program(prog, model)
+        assert failure is None, (model, failure)
+        assert race_free, model
+
+
+def test_ddmin_produces_one_minimal_racy_core():
+    spec = MODELS["commit"]
+    prog = [(0, ("w", 0, 8)), (0, ("sync1",)), (1, ("r", 0, 8)),
+            (2, ("w", 4, 8)), (1, ("sync1",)), (0, ("barrier",))]
+
+    def racy(p):
+        return bool(run_litmus(p, "commit").storage_races(spec))
+
+    assert racy(prog)
+    small = ddmin(prog, racy)
+    assert racy(small)
+    assert len(small) <= 3
+    # 1-minimality: dropping any single remaining step kills the race.
+    for i in range(len(small)):
+        cand = small[:i] + small[i + 1:]
+        assert not cand or not racy(cand), format_program(cand)
+
+
+def test_minimized_disagreement_recorded():
+    """Force a 'disagreement' by checking a barrier-free racy program
+    against a broken predicate path: fuzz with minimize=True must attach
+    minimized programs to any finding.  With the real checker there are
+    no findings — pin that the plumbing still returns cleanly."""
+    res = fuzz(n=25, seed=1, minimize=True)
+    assert res.ok
+    for d in res.disagreements:  # pragma: no cover - empty on pass
+        assert d.minimized is not None

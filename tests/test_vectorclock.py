@@ -1,0 +1,179 @@
+"""Golden + incremental-contract tests for the vector-clock hb engine.
+
+The engine (:mod:`repro.analysis.vectorclock`) answers every
+``Execution.hb`` query; ``Execution._build_hb`` stays as the O(n²)
+reference oracle.  These tests pin the two equal on random executions
+with interleaved construction/queries, and pin the incremental contract
+through ``hb_stats()``: appends and forward so edges never trigger a
+full rebuild, backward edges demote to topo mode, cycles raise.
+"""
+
+import random
+
+import pytest
+
+from repro.analysis.vectorclock import VectorClockIndex, _join
+from repro.core.checker import TracedRun
+from repro.core.consistency import PosixFS
+from repro.core.model import Execution
+
+F = "/vc"
+
+
+def _closure(exe):
+    """Reference hb predicate from the O(n²) reachability builder."""
+    reach = exe._build_hb()
+    return lambda a, b: b.op_id in reach[a.op_id]
+
+
+def _random_exe(rng, n_pids=4, n_ops=36):
+    exe = Execution()
+    syncs = []
+    for _ in range(n_ops):
+        pid = rng.randrange(n_pids)
+        roll = rng.random()
+        if roll < 0.35:
+            s = exe.sync(pid, "", "m")
+            peers = [x for x in syncs if x.pid != pid]
+            if peers and rng.random() < 0.7:
+                exe.add_so(rng.choice(peers), s)
+            syncs.append(s)
+        elif roll < 0.70:
+            off = rng.randrange(48)
+            exe.write(pid, F, off, off + rng.randint(1, 12))
+        else:
+            off = rng.randrange(48)
+            exe.read(pid, F, off, off + rng.randint(1, 12))
+    return exe
+
+
+def _assert_equiv(exe):
+    ref = _closure(exe)
+    for a in exe.ops:
+        for b in exe.ops:
+            if a is not b:
+                assert exe.hb(a, b) == ref(a, b), (a.op_id, b.op_id)
+
+
+def test_golden_equivalence_random():
+    rng = random.Random(7)
+    for _ in range(120):
+        _assert_equiv(_random_exe(rng))
+
+
+def test_append_only_is_single_pass():
+    """The cache-invalidation fix: queries between appends cost O(new)."""
+    exe = _random_exe(random.Random(3), n_ops=30)
+    exe.hb(exe.ops[0], exe.ops[-1])
+    stats = exe.hb_stats()
+    assert stats["ops_indexed"] == len(exe.ops)
+    assert stats["ops_processed"] == len(exe.ops)
+    assert stats["full_builds"] == 0
+    # Append five more ops + one forward edge at the frontier: only the
+    # new ops get processed, no rebuild.
+    s1 = exe.sync(0, "", "m")
+    for i in range(3):
+        exe.write(1, F, 8 * i, 8 * i + 4)
+    s2 = exe.sync(1, "", "m")
+    exe.add_so(s1, s2)
+    exe.hb(s1, exe.ops[-1])
+    stats = exe.hb_stats()
+    assert stats["ops_processed"] == len(exe.ops)
+    assert stats["full_builds"] == 0
+    _assert_equiv(exe)
+
+
+def test_interleaved_queries_and_edges_no_full_rebuild():
+    rng = random.Random(13)
+    for _ in range(25):
+        exe = _random_exe(rng, n_ops=12)
+        exe.hb(exe.ops[0], exe.ops[-1])
+        # Grow the execution in bursts, querying after every burst; add
+        # forward so edges both at the frontier and into the already-
+        # indexed prefix (suffix re-derive, never a full rebuild).
+        for _ in range(6):
+            a = exe.sync(rng.randrange(4), "", "m")
+            for _ in range(rng.randint(0, 3)):
+                off = rng.randrange(48)
+                exe.write(rng.randrange(4), F, off, off + 4)
+            b = exe.sync((a.pid + 1) % 4, "", "m")
+            exe.add_so(a, b)
+            exe.hb(a, b)
+        assert exe.hb_stats()["full_builds"] == 0
+        _assert_equiv(exe)
+
+
+def test_backward_edge_demotes_to_topo_mode():
+    exe = Execution()
+    a = exe.sync(0, "", "m")
+    b = exe.sync(1, "", "m")
+    exe.hb(a, b)
+    assert exe.hb_stats()["full_builds"] == 0
+    # b --so--> a points backward in creation order: still acyclic, but
+    # the incremental pass can't handle it — a Kahn rebuild must run.
+    exe.add_so(b, a)
+    assert exe.hb(b, a)
+    assert not exe.hb(a, b)
+    assert exe.hb_stats()["full_builds"] >= 1
+    _assert_equiv(exe)
+
+
+def test_cycle_raises_like_the_closure_builder():
+    exe = Execution()
+    a = exe.sync(0, "", "m")
+    b = exe.sync(1, "", "m")
+    exe.add_so(a, b)
+    exe.add_so(b, a)
+    with pytest.raises(ValueError, match="cycle"):
+        exe.hb(a, b)
+    with pytest.raises(ValueError, match="cycle"):
+        exe._build_hb()
+
+
+def test_hub_barrier_leaves_share_one_snapshot():
+    """O(P) barriers: every post-barrier snapshot aliases the hub's
+    release dict instead of P copies of a P-entry vector."""
+    run = TracedRun(PosixFS())
+    pids = list(range(8))
+    fhs = {p: run.open(p, F, node=p) for p in pids}
+    for p in pids:
+        run.write_at(p, fhs[p], 64 * p, bytes(8))
+    exe = run.exe
+    pre = exe.ops[:8]  # PosixFS open records no formal op; writes first
+    leaves = run.barrier(pids)
+    # Everything pre-barrier is hb everything post-barrier, cross-pid.
+    post = [run.write_at(p, fhs[p], 64 * p + 16, bytes(4)) for p in pids]
+    for p in pids:
+        for q in pids:
+            if p != q:
+                assert exe.hb(pre[p], post[q])
+    vc = exe._vc
+    assert vc is not None
+    assert len({id(vc.snapshot(lv)) for lv in leaves}) == 1
+
+
+def test_join_aliases_dominating_input():
+    small = {0: 1}
+    big = {0: 5, 1: 2}
+    assert _join([small, big]) is big
+    merged = _join([{0: 5}, {1: 7}])
+    assert merged == {0: 5, 1: 7}
+
+
+def test_duck_typed_index_standalone():
+    """The module is dependency-free: any op with op_id/pid/seq works."""
+
+    class O:  # noqa: E742 - deliberate tiny stub
+        def __init__(self, op_id, pid, seq):
+            self.op_id, self.pid, self.seq = op_id, pid, seq
+
+    ops = [O(0, 0, 0), O(1, 1, 0), O(2, 0, 1), O(3, 1, 1)]
+    vc = VectorClockIndex(ops, [(0, 3)])
+    assert vc.hb(ops[0], ops[3])
+    assert not vc.hb(ops[1], ops[2])
+    assert vc.hb(ops[0], ops[2])  # po
+    # Live references: extend both lists, re-query without rebuilding.
+    ops.append(O(4, 2, 0))
+    vc.so_edges.append((3, 4))
+    assert vc.hb(ops[0], ops[4])
+    assert vc.stats()["full_builds"] == 0
