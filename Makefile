@@ -17,8 +17,8 @@ FMT_PATHS := benchmarks/__init__.py \
 	benchmarks/perf.py \
 	src/repro/core/extents.py
 
-.PHONY: test test-fast lint bench bench-fig7 bench-fig8 bench-smoke \
-	perf perf-full analyze analyze-smoke
+.PHONY: test test-fast lint docs-check bench bench-fig7 bench-fig8 \
+	bench-smoke perf perf-full analyze analyze-smoke
 
 # Tier-1 verification target (same invocation as ROADMAP.md).
 test:
@@ -47,6 +47,11 @@ lint:
 		     "skipping the format ratchet ($(words $(FMT_PATHS)) files)"; \
 	fi
 
+# Dep-free markdown link/anchor/path checker over docs/ + README
+# (blocking in CI alongside tier-1; pure stdlib, runs anywhere).
+docs-check:
+	$(PYTHON) tools/docs_check.py
+
 bench:
 	$(PYTHON) -m benchmarks.run --fast
 
@@ -72,10 +77,11 @@ analyze:
 	$(PYTHON) -m repro.analysis --fig all --full --fuzz 200 --minimize \
 		--lint --out ANALYSIS.txt
 
-# Wall-clock / peak-RSS harness (BENCH_pr5.json): fast grid, both data
-# planes (extent vs byte-moving materialize).  BENCH_pr4.json is the
-# frozen PR-4 capture; the PR-5 hot-path before/after lives under
-# hotpath_pr5 in BENCH_pr5.json.
+# Wall-clock / peak-RSS harness (BENCH_pr8.json): fast grid, both data
+# planes (extent vs byte-moving materialize), scalar vs vector replay
+# per figure, plus the 65536-client fig7_big vectorized-replay scale
+# point.  BENCH_pr4.json / BENCH_pr5.json are the frozen earlier
+# captures (the PR-5 hot-path before/after lives under hotpath_pr5).
 perf:
 	$(PYTHON) -m benchmarks.perf --grid fast
 

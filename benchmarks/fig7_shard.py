@@ -155,6 +155,71 @@ def run(fast: bool = False) -> List[Dict]:
     return rows
 
 
+def run_point(clients: int, shards: int = 8, model: str = "commit",
+              engine: str = "scalar", m: int = M_OPS,
+              timings: Optional[Dict] = None) -> Dict:
+    """One RN-R point at an arbitrary client count (``--clients``).
+
+    ``clients`` is rounded down to a multiple of ``PROCS`` (16 procs per
+    node, half the nodes write / half read — the fig7 geometry).  This
+    is the scale extension the vectorized replay engine exists for:
+    ``python -m benchmarks.fig7_shard --clients 65536 --engine vector``
+    prices a ~2.6M-event ledger without the per-event Python loop.
+    """
+    n = max(2, clients // PROCS)
+    cfg = rn_r(n, ACCESS, model, p=PROCS, m=m)
+    res = run_workload(cfg, shards=shards, batch=TOPOLOGY["batch"],
+                       engine=engine, timings=timings)
+    row = {
+        "workload": "RN-R", "clients": cfg.n * PROCS, "shards": shards,
+        "batch": TOPOLOGY["batch"], "linger_us": "", "ack_window": "",
+        "model": model, "read_bw": round(res.read_bandwidth),
+        "rpc_query": res.rpc_counts["query"],
+        "rpc_msgs": res.phase("read").rpc_msgs,
+        "verified": res.verified_reads,
+    }
+    if timings is not None:
+        row.update({k: timings[k] for k in ("exec_s", "replay_s", "events")})
+    return row
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        description="Fig 7 sweep, or a single RN-R point at --clients")
+    ap.add_argument("--fast", action="store_true",
+                    help="sweep one scale point instead of four")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="run ONE RN-R point at this client count "
+                         "(rounded down to a multiple of 16) instead of "
+                         "the sweep — the vectorized-replay scale "
+                         "extension (e.g. 65536)")
+    ap.add_argument("--shards", type=int, default=8,
+                    help="shard count for the --clients point")
+    ap.add_argument("--model", choices=("commit", "session"),
+                    default="commit",
+                    help="consistency model for the --clients point")
+    ap.add_argument("--m", type=int, default=M_OPS,
+                    help="ops per rank for the --clients point")
+    ap.add_argument("--engine", choices=("scalar", "vector"),
+                    default="vector",
+                    help="DES replay engine for the --clients point "
+                         "(default vector: the point of going big)")
+    args = ap.parse_args(argv)
+
+    if args.clients is None:
+        for row in run(fast=args.fast):
+            print(json.dumps(row))
+        return 0
+    timings: Dict = {}
+    row = run_point(args.clients, shards=args.shards, model=args.model,
+                    engine=args.engine, m=args.m, timings=timings)
+    print(json.dumps(row))
+    return 0
+
+
 def _bw(rows: List[Dict], model: str, shards: int, clients: int) -> float:
     return pick(rows, workload="RN-R", model=model, shards=shards,
                 clients=clients)["read_bw"]
@@ -354,3 +419,8 @@ CLAIMS = [
             for r in rows),
     ),
 ]
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -11,13 +11,21 @@ RSS — on both data planes:
   (``BaseFS(materialize=True)``), the pre-PR-4 behaviour.
 
 Each (figure, mode) measurement runs in its OWN subprocess so
-``ru_maxrss`` is attributable; results merge into ``BENCH_pr5.json`` at
-the repo root — the perf trajectory record (``BENCH_pr4.json`` is the
-frozen PR-4 capture).  The ``hotpath_pr5`` section records the PR-5
-Python-level hot-path fixes on the fig7 full-grid point (2048 clients):
-memoized random-read deal (one shuffle per config instead of one per
-reader), single-windowed-splice ``OwnerIntervalMap.attach_many``, and
-the batcher's interned per-file key tuples.
+``ru_maxrss`` is attributable; results merge into ``BENCH_pr8.json`` at
+the repo root — the perf trajectory record (``BENCH_pr4.json`` /
+``BENCH_pr5.json`` are the frozen earlier captures).  The ``hotpath_pr5``
+section records the PR-5 Python-level hot-path fixes on the fig7
+full-grid point (2048 clients): memoized random-read deal (one shuffle
+per config instead of one per reader), single-windowed-splice
+``OwnerIntervalMap.attach_many``, and the batcher's interned per-file
+key tuples.
+
+PR 8 adds the vectorized replay engine (``src/repro/core/vecreplay.py``,
+``docs/REPLAY.md``): every workload point now reports ``replay_s`` (the
+scalar reference DES) AND ``replay_vector_s`` (the struct-of-arrays
+engine, bitwise-identical results), and the ``fig7_big`` point prices
+RN-R at 65536 clients (131072 on the full grid) — the scale the scalar
+loop made impractical — on the extent plane only.
 
     PYTHONPATH=src python -m benchmarks.perf [--grid fast|full]
         [--figs fig3,...] [--modes extent,materialize] [--out PATH]
@@ -42,19 +50,40 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from benchmarks.common import KB, MB
+from repro.core.basefs import BaseFS
 from repro.core.costmodel import CostModel
 from repro.io.scr import SCRConfig, run_scr
 from repro.io.workloads import cc_r, cn_w, rn_r, rn_r_hot, run_workload, set_topology
 
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
-OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr5.json"))
+OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr8.json"))
 MODES = ("extent", "materialize")
+
+
+def _time_vector_replay(ledger, timings: Dict) -> None:
+    """Price the same ledger on the vector engine; add its wall-clock.
+
+    ``replay_vector_s`` includes the one-time struct-of-arrays lowering
+    (the honest cold-replay cost); ``replay_vector_warm_s`` re-prices
+    the kept ledger with the lowering cached — the cost that matters
+    when sweeping hardware constants / ack windows over one recording.
+    """
+    t0 = time.perf_counter()
+    CostModel().replay(ledger, engine="vector")
+    t1 = time.perf_counter()
+    CostModel().replay(ledger, engine="vector")
+    t2 = time.perf_counter()
+    timings["replay_vector_s"] = t1 - t0
+    timings["replay_vector_warm_s"] = t2 - t1
 
 
 def _workload_point(cfg, **overrides) -> Callable[[], Dict]:
     def measure() -> Dict:
         timings: Dict = {}
-        run_workload(cfg, timings=timings, **overrides)
+        fs = BaseFS(num_shards=overrides.get("shards"),
+                    adaptive=overrides.get("adaptive"))
+        run_workload(cfg, fs=fs, timings=timings)
+        _time_vector_replay(fs.ledger, timings)
         return timings
 
     return measure
@@ -82,7 +111,9 @@ def _dlio_point(hosts: int, per_host: int) -> Callable[[], Dict]:
         CostModel().replay(store.fs.ledger)
         t2 = time.perf_counter()
         events = len(store.fs.ledger.events)
-        return {"exec_s": t1 - t0, "replay_s": t2 - t1, "events": events}
+        timings = {"exec_s": t1 - t0, "replay_s": t2 - t1, "events": events}
+        _time_vector_replay(store.fs.ledger, timings)
+        return timings
 
     return measure
 
@@ -100,6 +131,10 @@ def _points(grid: str) -> Dict[str, Dict]:
     cfg3 = cn_w(nodes, 8 * MB, "commit", p=12, m=10)
     cfg4 = cc_r(nodes, 8 * MB, "commit", p=12, m=10)
     cfg7 = rn_r(big_nodes, 8 * KB, "commit", p=16, m=10)
+    # The vectorized-replay scale payoff: 65536 clients (131072 full) —
+    # a point the per-event scalar loop priced in tens of seconds.
+    huge_nodes = 4096 if fast else 8192
+    cfg7big = rn_r(huge_nodes, 8 * KB, "commit", p=16, m=10)
     cfg8 = rn_r_hot(hot_nodes, 8 * KB, "commit", p=16, m=10)
     return {
         "fig3": {
@@ -122,6 +157,12 @@ def _points(grid: str) -> Dict[str, Dict]:
             "point": f"RN-R commit 8KB, 8 shards, {16 * big_nodes} clients",
             "measure": _workload_point(cfg7, shards=8),
         },
+        "fig7_big": {
+            "point": f"RN-R commit 8KB, 8 shards, {16 * huge_nodes} clients "
+                     "(vectorized-replay scale point)",
+            "measure": _workload_point(cfg7big, shards=8),
+            "modes": ("extent",),  # byte plane is pointless at this scale
+        },
         "fig8": {
             "point": f"RN-R-hot commit 8KB, 8 shards adaptive, {16 * hot_nodes} clients",
             "measure": _workload_point(cfg8, shards=8, adaptive=True),
@@ -137,6 +178,9 @@ def _run_one(fig: str, mode: str, grid: str) -> Dict:
     result["peak_rss_mb"] = round(peak_kb / 1024.0, 1)
     result["exec_s"] = round(result["exec_s"], 3)
     result["replay_s"] = round(result["replay_s"], 3)
+    for k in ("replay_vector_s", "replay_vector_warm_s"):
+        if k in result:
+            result[k] = round(result[k], 3)
     return result
 
 
@@ -187,7 +231,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     grid_results: Dict[str, Dict] = {}
     for fig in figs:
         entry: Dict = {"point": points[fig]["point"]}
-        for mode in modes:
+        fig_modes = [m for m in modes if m in points[fig].get("modes", MODES)]
+        for mode in fig_modes:
             t0 = time.perf_counter()
             entry[mode] = _spawn(fig, mode, args.grid)
             dt = time.perf_counter() - t0
@@ -195,9 +240,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                 failed += 1
                 print(f"  {fig} [{mode:11s}] FAILED: {entry[mode]['error']}")
                 continue
+            vec = entry[mode].get("replay_vector_s")
+            vec_col = f"  vec {vec:7.3f}s" if vec is not None else ""
             print(
                 f"  {fig} [{mode:11s}] exec {entry[mode]['exec_s']:8.3f}s  "
-                f"replay {entry[mode]['replay_s']:7.3f}s  "
+                f"replay {entry[mode]['replay_s']:7.3f}s{vec_col}  "
                 f"rss {entry[mode]['peak_rss_mb']:8.1f}MB  "
                 f"({points[fig]['point']}; child {dt:.1f}s)"
             )
@@ -206,18 +253,30 @@ def main(argv: Optional[List[str]] = None) -> int:
             entry["exec_speedup"] = round(mat["exec_s"] / ext["exec_s"], 2)
         if ext.get("peak_rss_mb") and mat.get("peak_rss_mb"):
             entry["rss_reduction"] = round(mat["peak_rss_mb"] / ext["peak_rss_mb"], 2)
+        if ext.get("replay_s") and ext.get("replay_vector_s"):
+            entry["replay_speedup"] = round(
+                ext["replay_s"] / ext["replay_vector_s"], 2)
+        if ext.get("replay_s") and ext.get("replay_vector_warm_s"):
+            entry["replay_speedup_warm"] = round(
+                ext["replay_s"] / ext["replay_vector_warm_s"], 2)
         grid_results[fig] = entry
 
     doc: Dict = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
             doc = json.load(f)
-    doc.setdefault("pr", 5)
+    doc.setdefault("pr", 8)
     doc.setdefault(
         "note",
         "Wall-clock + peak-RSS per figure, extent (zero-copy) vs "
-        "materialize (byte-moving) data plane; hotpath_pr5 records the "
-        "PR-5 BaseFS-execution hot-path fixes; see benchmarks/perf.py.",
+        "materialize (byte-moving) data plane.  replay_s is the scalar "
+        "reference DES, replay_vector_s the struct-of-arrays engine "
+        "(bitwise-identical results; docs/REPLAY.md) including its "
+        "one-time lowering, replay_vector_warm_s with the lowering "
+        "cached (the re-pricing path), replay_speedup(_warm) the "
+        "scalar/vector ratios on the extent plane; fig7_big is the "
+        "65536-client vectorized-replay scale point.  See "
+        "benchmarks/perf.py.",
     )
     # Merge per figure: a partial --figs/--modes run refreshes only the
     # figures it measured, never discarding the rest of the record.

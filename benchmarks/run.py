@@ -15,7 +15,7 @@ tests of the consistency layers as much as performance measurements.
                                             [--linger USEC] [--ack-window N]
                                             [--stripe BYTES]
                                             [--adaptive] [--materialize]
-                                            [--seed N]
+                                            [--seed N] [--engine ENGINE]
 
 ``--shards``/``--batch``/``--linger``/``--ack-window``/``--stripe``/
 ``--adaptive`` set the deployment topology for figs 3-6 (fig7 sweeps
@@ -80,11 +80,33 @@ def main(argv=None) -> int:
                     help="RPC batch size in range descriptors (0 = off)")
     ap.add_argument("--linger", type=float, default=None,
                     help="send-queue coalescing window in MICROSECONDS "
-                         "(0 = send-immediate; default 50)")
+                         "(default 50).  Requires --batch > 1 to have "
+                         "any effect; --linger 0 disables cross-event "
+                         "coalescing (each batch closes as soon as "
+                         "another event by the same client intervenes), "
+                         "so only the size cap groups back-to-back "
+                         "calls.  The DES re-splits batch membership at "
+                         "timer expiry, so a window below the "
+                         "per-client op gap ships the same wire "
+                         "messages as unbatched")
     ap.add_argument("--ack-window", type=int, default=None,
                     help="unacked fire-and-forget attach flushes a "
                          "client chain may run ahead of (0 = every "
-                         "flush blocks on its round trip; default 0)")
+                         "flush blocks on its round trip; default 0).  "
+                         "Only flushes triggered by the size cap or the "
+                         "--linger timer are fire-and-forget; fences "
+                         "(commit/session_close/file_sync/close), "
+                         "dependent reads and phase barriers always "
+                         "drain the window — so a nonzero ack window "
+                         "pays on streaming writers between sync "
+                         "points, and --linger/--batch control how "
+                         "many flushes there are to overlap")
+    ap.add_argument("--engine", choices=("scalar", "vector"),
+                    default="scalar",
+                    help="DES replay implementation: the scalar "
+                         "per-event reference loop or the vectorized "
+                         "struct-of-arrays engine (bitwise-identical "
+                         "results, faster at scale; see docs/REPLAY.md)")
     ap.add_argument("--stripe", type=int, default=None,
                     help="metadata stripe width in bytes (default 64KiB)")
     ap.add_argument("--adaptive", action="store_true", default=None,
@@ -111,6 +133,7 @@ def main(argv=None) -> int:
         stripe=args.stripe, adaptive=args.adaptive,
         materialize=args.materialize, ack_window=args.ack_window,
     )
+    workloads.set_replay_engine(args.engine)
 
     all_pass = True
     claim_summary = []

@@ -3,15 +3,19 @@
 BaseFS provides *no* implicit consistency.  Each logical client buffers its
 writes in a node-local burst buffer (here: an in-process extent log standing
 in for the Intel 910 SSD); visibility between clients is established only by
-explicit ``attach`` / ``query`` synchronization primitives handled by a
-single global server.  Consistency layers (PosixFS/CommitFS/SessionFS/
+explicit ``attach`` / ``query`` synchronization primitives handled by the
+global metadata service — the paper's single server by default, hash-
+partitioned over ``num_shards`` independent shards when configured.
+Consistency layers (PosixFS/CommitFS/SessionFS/
 MPIIOFS, see :mod:`repro.core.consistency`) are built on these primitives.
 
 Everything observable by the cost model is recorded in an :class:`EventLedger`:
 per-client SSD bytes, client-to-client transfer bytes, underlying-PFS bytes,
 and every server RPC with its type and payload size.  The discrete-event
 cost model (:mod:`repro.core.costmodel`) replays the ledger against hardware
-constants to produce bandwidth numbers.
+constants to produce bandwidth numbers; :mod:`repro.core.vecreplay` is its
+bitwise-identical struct-of-arrays engine (``replay(engine="vector")``,
+contract in ``docs/REPLAY.md``).
 
 Data plane: burst buffers and PFS files store lazy *payload extents*
 (:mod:`repro.core.extents`) instead of real byte arrays — a write appends
@@ -157,12 +161,26 @@ class EventLedger:
         self.record(EventKind.MARKER, -1, rpc_type=name)
 
     def clear(self) -> None:
+        """Drop all recorded events and every derived aggregate.
+
+        Barrier hooks run first so open send queues flush into the
+        *old* event list, not the emptied one.  ``last_seq`` must be
+        wiped with the events: it holds virtual-clock anchors (seqs)
+        into the cleared list, and a reused ledger would otherwise
+        stamp the first post-clear flush with a stale ``last_after``
+        pointing at an event that no longer exists.  The vectorized
+        replay's lowering cache (:mod:`repro.core.vecreplay`) keys on
+        event identity and is likewise invalidated.  ``_seq`` keeps
+        counting — replay only needs seqs contiguous, not zero-based.
+        """
         for hook in self.on_barrier:
             hook()
         self.events.clear()
+        self.last_seq.clear()
         self._count_by_type.clear()
         self._count_by_kind.clear()
         self._bytes_by_kind.clear()
+        self.__dict__.pop("_vec_lowered", None)
 
     # ---- aggregate views used by tests and the cost model ----
     def count(self, kind: EventKind, rpc_type: Optional[str] = None) -> int:

@@ -1,7 +1,9 @@
 """Discrete-event cost model replaying BaseFS ledgers (§6 methodology).
 
-BaseFS runs move real bytes and record every SSD access, client-to-client
-transfer, and server RPC in an :class:`~repro.core.basefs.EventLedger`.
+BaseFS runs record every SSD access, client-to-client transfer, and
+server RPC in an :class:`~repro.core.basefs.EventLedger` (on the
+default extent plane no real bytes move — the ledger carries placements
+and sizes, which is all pricing needs).
 This module reconstructs the *concurrent* timing of that execution on
 paper-like hardware (LLNL Catalyst, §6): every client advances through its
 own event chain; contention arises only through shared resources —
@@ -104,6 +106,17 @@ start clamped to the producer's completion.  Edges always point to
 strictly earlier ledger seqs, so the wait graph is acyclic.  The default
 deployment (``num_shards=1, batch=0``) emits no edges and replays
 event-for-event as the pre-batching model.
+
+Engines
+-------
+The per-event loop in this module is the *scalar reference engine* —
+the spec every pricing rule is defined against, and the only engine
+with diagnostics (traces, forced-order replays).
+``replay(engine="vector")`` routes to the struct-of-arrays engine in
+:mod:`repro.core.vecreplay`, which returns bitwise-identical
+:class:`PhaseResult` values and is faster at scale and on repeated
+re-pricing; the full contract and the vector mapping live in
+``docs/REPLAY.md``.
 """
 
 from __future__ import annotations
@@ -249,11 +262,23 @@ class CostModel:
                ack_window: Optional[int] = None,
                record_splits: Optional[Dict[int, Tuple[int, ...]]] = None,
                exec_splits: Optional[Dict[int, Tuple[int, ...]]] = None,
+               engine: str = "scalar",
                ) -> List[PhaseResult]:
         """Price the ledger; optionally append per-event ``(event, start,
         finish)`` DES times to ``trace`` (for a flushed batch, ``start``
         is its virtual-clock departure) and per-batch :class:`FlushTrace`
         records to ``flush_trace``.
+
+        ``engine`` selects the replay implementation: ``"scalar"`` (this
+        per-event loop — the reference oracle) or ``"vector"`` (the
+        struct-of-arrays engine in :mod:`repro.core.vecreplay`, bitwise
+        result-identical and several times faster at scale; see
+        ``docs/REPLAY.md``).  Diagnostics (``trace``, ``flush_trace``,
+        ``record_order``/``exec_order``, ``record_splits``/
+        ``exec_splits``) are scalar-only; the vector engine rejects
+        them.  A ledger the vector engine cannot lower (non-contiguous
+        seqs from a hand-built ledger) silently falls back to the
+        scalar path — results are identical either way.
 
         ``ack_window`` bounds the unacked fire-and-forget attach flushes
         a client chain may run ahead of; ``None`` uses the deployment's
@@ -280,6 +305,23 @@ class CostModel:
         could change the message count and break pointwise dominance.
         The same record/exec pair makes ack-window comparisons sound
         (the ``ack_window`` monotonicity property tests rely on it)."""
+        if engine not in ("scalar", "vector"):
+            raise ValueError(f"unknown replay engine {engine!r}")
+        if engine == "vector":
+            diagnostics = (trace, flush_trace, record_order, exec_order,
+                           record_splits, exec_splits)
+            if any(d is not None for d in diagnostics):
+                raise ValueError(
+                    "engine='vector' does not support replay diagnostics "
+                    "(trace/flush_trace/record_order/exec_order/"
+                    "record_splits/exec_splits); use engine='scalar'")
+            from repro.core import vecreplay
+            try:
+                return vecreplay.replay_vectorized(
+                    self.hw, ledger, ack_window=ack_window,
+                    honor_edges=honor_edges)
+            except vecreplay.UnsupportedLedger:
+                pass  # fall through to the scalar reference path
         hw = self.hw
         node_of = dict(ledger.client_node)
         # Split the ledger at markers into phases.

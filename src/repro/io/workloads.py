@@ -42,6 +42,19 @@ from repro.core.extents import PatternExtent, Payload
 
 SHARED_FILE = "/shared/workload.dat"
 
+#: Process-wide default DES replay engine (``benchmarks.run --engine``):
+#: ``"scalar"`` (the reference per-event loop) or ``"vector"`` (the
+#: struct-of-arrays engine, bitwise-identical results).  Replay choice,
+#: not deployment topology — hence not part of :data:`TOPOLOGY`.
+REPLAY = {"engine": "scalar"}
+
+
+def set_replay_engine(engine: str) -> None:
+    """Set the process-wide default for ``run_workload(engine=...)``."""
+    if engine not in ("scalar", "vector"):
+        raise ValueError(f"unknown replay engine {engine!r}")
+    REPLAY["engine"] = engine
+
 #: Memoize fully-expanded patterns up to this size (8 KB and the 116 KB
 #: DL sample both fit; 8 MB expansions stay uncached to bound the cache
 #: at ``256 x 256 KB = 64 MB`` worst-case).
@@ -270,7 +283,8 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  materialize: Optional[bool] = None,
                  ack_window: Optional[int] = None,
                  timings: Optional[Dict[str, float]] = None,
-                 tracer=None) -> WorkloadResult:
+                 tracer=None,
+                 engine: Optional[str] = None) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
@@ -285,6 +299,10 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
     the default (extent) data plane, real byte round-trips under
     ``materialize=True``.  ``timings``, if given, receives ``exec_s``
     (BaseFS execution), ``replay_s`` (DES pricing) and ``events``.
+    ``engine`` selects the DES replay implementation — ``"scalar"``
+    (reference) or ``"vector"`` (bitwise-identical results, faster at
+    scale; see :meth:`repro.core.costmodel.CostModel.replay`); ``None``
+    uses the process-wide :data:`REPLAY` default.
 
     ``tracer`` (an :class:`repro.analysis.trace.ExecutionTracer`)
     optionally lifts the run into the paper's formal execution for race
@@ -377,7 +395,7 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
 
     fs.drain()  # flush tail send-queue batches so the DES prices them
     t1 = _time.perf_counter()
-    phases = CostModel(hw).replay(ledger)
+    phases = CostModel(hw).replay(ledger, engine=engine or REPLAY["engine"])
     t2 = _time.perf_counter()
     if timings is not None:
         timings["exec_s"] = t1 - t0

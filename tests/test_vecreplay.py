@@ -1,0 +1,340 @@
+"""Vectorized struct-of-arrays replay engine: scalar ≡ vector, bitwise.
+
+PR-8 tentpole coverage (the golden-equivalence spec is ``docs/REPLAY.md``):
+
+* **PR-4 golden bitwise** — the vector engine reproduces the checked-in
+  PR-4 golden ``float.hex`` durations directly, across all four
+  consistency models (not merely "agrees with today's scalar engine":
+  agrees with the captures from two PRs ago);
+* **scalar ≡ vector** — on seeded random scripts and full workload runs,
+  every ``PhaseResult`` field (``duration`` compared *bitwise* via
+  ``float.hex``, ``rpc_msgs``, ``rpc_count``, ``bytes_by_kind``,
+  ``clients``) is identical across all four models × linger ×
+  ack_window, with and without dependency edges, plus a hypothesis
+  property over random scripts;
+* **degenerate shapes** — empty ledgers, marker-only ledgers,
+  single-client chains, fence-on-empty-queue sync markers, hand-built
+  aggregate-anchor batches (no ``members``), and ledgers the vector
+  engine cannot lower (non-contiguous seqs → silent scalar fallback);
+* **ledger-reuse regression** — ``EventLedger.clear()`` wipes
+  ``last_seq`` (stale virtual-clock anchors) and the lowering cache, so
+  a reused ledger replays identically under both engines.
+"""
+
+import random
+
+import pytest
+
+from repro.core import vecreplay
+from repro.core.basefs import BaseFS, EventKind, EventLedger
+from repro.core.consistency import make_fs
+from repro.core.costmodel import CostModel, HardwareConstants
+from repro.io.workloads import cc_r, rn_r, run_workload
+
+from test_ack_window import PR4_GOLDEN
+
+KB = 1024
+MODELS = ("posix", "commit", "session", "mpiio")
+
+
+def _assert_same(scalar, vector):
+    """Bitwise phase-result equality (the tentpole's correctness gate)."""
+    assert len(scalar) == len(vector)
+    for a, b in zip(scalar, vector):
+        assert a.name == b.name
+        assert a.duration.hex() == b.duration.hex(), (
+            f"{a.name}: scalar {a.duration.hex()} != vector {b.duration.hex()}"
+        )
+        assert a.rpc_msgs == b.rpc_msgs
+        assert a.rpc_count == b.rpc_count
+        assert a.bytes_by_kind == b.bytes_by_kind
+        assert a.clients == b.clients
+
+
+def _both(ledger, cm=None, **kw):
+    cm = cm or CostModel()
+    scalar = cm.replay(ledger, **kw)
+    vector = cm.replay(ledger, engine="vector", **kw)
+    _assert_same(scalar, vector)
+    return scalar
+
+
+# ---------------------------------------------------------------------------
+# PR-4 golden bitwise: the vector engine against two-PRs-old captures.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model", MODELS)
+def test_vector_reproduces_pr4_golden_durations(model):
+    fs = BaseFS(num_shards=2, batch=8, linger=0.0)
+    run_workload(cc_r(2, 8 * KB, model, p=3, m=4), fs=fs)
+    phases = CostModel().replay(fs.ledger, engine="vector")
+    golden = [(p.name, p.duration.hex()) for p in phases]
+    assert golden == PR4_GOLDEN[model][1]
+
+
+# ---------------------------------------------------------------------------
+# Scalar ≡ vector across the full configuration lattice.
+# ---------------------------------------------------------------------------
+def _mixed_script(rng, model, n_ops=70, n_clients=4):
+    """Random op stream with sync points and phase barriers mixed in."""
+    script = []
+    for _ in range(n_ops):
+        r = rng.random()
+        client = rng.randrange(n_clients)
+        if r < 0.08:
+            script.append((client, "sync", "", 0, 0))
+        elif r < 0.12:
+            script.append((-1, "barrier", "", 0, 0))
+        else:
+            script.append((
+                client,
+                "write" if r < 0.6 else "read",
+                rng.choice(("/s/a", "/s/b")),
+                rng.randrange(0, 4096),
+                rng.randrange(1, 512),
+            ))
+    return script
+
+
+def _apply_mixed(fs, model, script):
+    layer = make_fs(model, fs)
+    handles = {}
+    nphase = 0
+    for client, op, path, offset, size in script:
+        if op == "barrier":
+            nphase += 1
+            fs.ledger.mark_phase(f"p{nphase}")
+            continue
+        key = (client, path or "/s/a")
+        if key not in handles:
+            handles[key] = layer.open(client, key[1], node=client % 3)
+        fh = handles[key]
+        if op == "sync":
+            if model == "commit":
+                layer.commit(fh)
+            elif model == "session":
+                layer.session_close(fh)
+                layer.session_open(fh)
+            elif model == "mpiio":
+                layer.file_sync(fh)
+            continue
+        layer.seek(fh, offset)
+        if op == "write":
+            layer.write(fh, bytes(
+                ((offset + i) * 17 + client) & 0xFF for i in range(size)
+            ))
+        else:
+            layer.read(fh, size)
+    fs.drain()
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("seed", range(4))
+def test_random_scripts_bitwise_identical(model, seed):
+    rng = random.Random(1000 * seed + hash(model) % 1000)
+    fs = BaseFS(batch=rng.choice([2, 4, 8, 16]),
+                num_shards=rng.choice([1, 2, 4]),
+                linger=rng.choice([0.0, 20e-6, 50e-6, None]),
+                ack_window=rng.choice([0, 1, 4]))
+    _apply_mixed(fs, model, _mixed_script(rng, model))
+    _both(fs.ledger)
+    _both(fs.ledger, honor_edges=False)
+    _both(fs.ledger, ack_window=2)
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("linger", [0.0, 50e-6, 1e-3])
+@pytest.mark.parametrize("ack_window", [0, 1, 4])
+def test_workload_lattice_bitwise_identical(model, linger, ack_window):
+    fs = BaseFS(num_shards=2, batch=8, linger=linger, ack_window=ack_window)
+    run_workload(cc_r(4, 8 * KB, model, p=2, m=5), fs=fs)
+    _both(fs.ledger)
+
+
+@pytest.mark.parametrize("model", ("commit", "posix"))
+def test_random_reads_and_adaptive_router(model):
+    fs = BaseFS(num_shards=4, batch=8, linger=50e-6, adaptive=True,
+                ack_window=2)
+    run_workload(rn_r(4, 8 * KB, model, p=2, m=6), fs=fs)
+    _both(fs.ledger)
+
+
+def test_hypothesis_random_scripts_bitwise_identical():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.given(
+        seed=st.integers(0, 2**20),
+        model=st.sampled_from(MODELS),
+        batch=st.integers(2, 16),
+        shards=st.sampled_from([1, 2, 4]),
+        linger=st.sampled_from([0.0, 20e-6, 50e-6]),
+        ack_window=st.integers(0, 4),
+    )
+    @hypothesis.settings(deadline=None, max_examples=30)
+    def run(seed, model, batch, shards, linger, ack_window):
+        fs = BaseFS(batch=batch, num_shards=shards, linger=linger,
+                    ack_window=ack_window)
+        _apply_mixed(fs, model,
+                     _mixed_script(random.Random(seed), model, n_ops=40))
+        _both(fs.ledger)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Degenerate shapes.
+# ---------------------------------------------------------------------------
+def test_empty_ledger():
+    fs = BaseFS()
+    assert _both(fs.ledger) == []
+
+
+def test_marker_only_ledger():
+    fs = BaseFS()
+    fs.ledger.mark_phase("write")
+    fs.ledger.mark_phase("read")
+    assert _both(fs.ledger) == []
+
+
+def test_single_client_chain():
+    fs = BaseFS(batch=4, linger=0.0)
+    layer = make_fs("posix", fs)
+    fh = layer.open(0, "/solo", node=0)
+    fs.ledger.mark_phase("write")
+    for j in range(9):
+        layer.seek(fh, j * KB)
+        layer.write(fh, b"x" * KB)
+    fs.drain()
+    phases = _both(fs.ledger)
+    assert [p.clients for p in phases] == [1] * len(phases)
+
+
+def test_fence_on_empty_queue_sync_marker():
+    # Zero-linger flushes are fire-and-forget under ack_window > 0; a
+    # fence that then finds an EMPTY send queue (the PFS drain flushed
+    # the last attach batch) records a zero-cost sync marker (rpc_type ==
+    # RPC_FENCE_MARKER) instead of a flush, and the vector engine must
+    # drain the unacked credits there identically.
+    fs = BaseFS(batch=8, linger=0.0, ack_window=4)
+    layer = make_fs("posix", fs)
+    fh = layer.open(0, "/f", node=0)
+    fs.ledger.mark_phase("write")
+    for j in range(3):
+        layer.seek(fh, j * 4 * KB)
+        layer.write(fh, b"d" * 4 * KB)
+    fs.bfs_flush_file(fs.clients[0], fh.bfs_handle)
+    layer.close(fh)  # queue now empty: fence marker, not a flush
+    fs.drain()
+    from repro.core.basefs import RPC_FENCE_MARKER
+    assert any(e.rpc_type == RPC_FENCE_MARKER for e in fs.ledger.events)
+    _both(fs.ledger)
+
+
+def test_handbuilt_aggregate_anchor_batch():
+    # PR-3-era batches carry no per-member ``members`` tuple: the DES
+    # reconstructs [open, close] anchors from opened_after/last_after.
+    led = EventLedger()
+    led.client_node[0] = 0
+    led.client_node[1] = 1
+    led.record(EventKind.SSD_WRITE, 0, 8 * KB)
+    led.record(EventKind.SSD_WRITE, 0, 8 * KB)
+    led.record(EventKind.SSD_WRITE, 1, 2 * KB)
+    led.record(EventKind.RPC, 0, nbytes=16 * KB, rpc_type="attach",
+               rpc_calls=4, rpc_ranges=4, flush="size", linger=30e-6,
+               opened_after=0, last_after=1)
+    led.record(EventKind.RPC, 1, rpc_type="query", shard=0, deps=(3,))
+    _both(led)
+    _both(led, ack_window=3)
+
+
+def test_noncontiguous_seqs_fall_back_to_scalar():
+    led = EventLedger()
+    led.client_node[0] = 0
+    led.record(EventKind.SSD_WRITE, 0, KB)
+    led.record(EventKind.SSD_WRITE, 0, KB)
+    led.record(EventKind.RPC, 0, KB, rpc_type="attach")
+    del led.events[1]  # seq gap: 0, 2
+    with pytest.raises(vecreplay.UnsupportedLedger):
+        vecreplay.lower(led)
+    # CostModel.replay(engine="vector") degrades to the scalar oracle.
+    _both(led)
+
+
+def test_vector_rejects_diagnostics_and_unknown_engine():
+    fs = BaseFS()
+    cm = CostModel()
+    with pytest.raises(ValueError):
+        cm.replay(fs.ledger, engine="turbo")
+    with pytest.raises(ValueError):
+        cm.replay(fs.ledger, trace=[], engine="vector")
+    with pytest.raises(ValueError):
+        cm.replay(fs.ledger, record_order=[], engine="vector")
+
+
+# ---------------------------------------------------------------------------
+# Ledger-reuse regressions (the clear() staleness bugfix).
+# ---------------------------------------------------------------------------
+def test_clear_resets_anchor_seqs():
+    fs = BaseFS(batch=4, linger=0.0)
+    layer = make_fs("posix", fs)
+    fh = layer.open(0, "/a", node=0)
+    for j in range(6):
+        layer.seek(fh, j * KB)
+        layer.write(fh, b"a" * KB)
+    fs.drain()
+    fs.ledger.clear()
+    assert fs.ledger.events == []
+    assert fs.ledger.last_seq == {}
+    # Reuse the SAME ledger: fresh anchors must reference fresh events
+    # only — before the fix, the first post-clear flush inherited a
+    # stale last_after into the cleared event list.
+    fh2 = layer.open(0, "/b", node=0)
+    for j in range(6):
+        layer.seek(fh2, j * KB)
+        layer.write(fh2, b"b" * KB)
+    fs.drain()
+    live = {e.seq for e in fs.ledger.events}
+    for e in fs.ledger.events:
+        for anchor in (e.opened_after, e.last_after, e.forced_after,
+                       *e.deps, *(m for m, _ in e.members)):
+            assert anchor == -1 or anchor in live
+    _both(fs.ledger)
+
+
+def test_clear_invalidates_lowering_cache_and_counters():
+    fs = BaseFS(batch=4, linger=0.0)
+    layer = make_fs("posix", fs)
+    fh = layer.open(0, "/a", node=0)
+    layer.write(fh, b"a" * KB)
+    fs.drain()
+    cm = CostModel()
+    _both(fs.ledger, cm=cm)  # populates the lowering cache
+    assert "_vec_lowered" in fs.ledger.__dict__
+    fs.ledger.clear()
+    assert "_vec_lowered" not in fs.ledger.__dict__
+    assert fs.ledger.count(EventKind.SSD_WRITE) == 0
+    assert fs.ledger.total_bytes(EventKind.SSD_WRITE) == 0
+    # Refill with different traffic; both engines agree on the new run.
+    fh2 = layer.open(1, "/b", node=1)
+    for j in range(3):
+        layer.seek(fh2, j * 2 * KB)
+        layer.write(fh2, b"b" * 2 * KB)
+    fs.drain()
+    assert fs.ledger.count(EventKind.SSD_WRITE) == 3
+    _both(fs.ledger, cm=cm)
+
+
+def test_lowering_cache_reused_across_replays():
+    fs = BaseFS(num_shards=2, batch=8, linger=0.0)
+    run_workload(cc_r(2, 8 * KB, "commit", p=3, m=4), fs=fs)
+    first = vecreplay.lowered_for(fs.ledger)
+    again = vecreplay.lowered_for(fs.ledger)
+    assert first is again
+    # Different hardware constants reuse the lowering, not the costs.
+    cm_a = CostModel()
+    cm_b = CostModel(HardwareConstants(ssd_write_bw=1e8))
+    a = cm_a.replay(fs.ledger, engine="vector")
+    b = cm_b.replay(fs.ledger, engine="vector")
+    assert a[0].duration != b[0].duration
+    _assert_same(cm_a.replay(fs.ledger), a)
+    _assert_same(cm_b.replay(fs.ledger), b)

@@ -1,0 +1,142 @@
+"""Dependency-free link/anchor checker for the repo's markdown docs.
+
+Walks ``docs/*.md`` plus the top-level ``README.md`` and verifies, with
+nothing beyond the stdlib:
+
+* every relative markdown link ``[text](path)`` resolves to a file that
+  exists (badge/action links and external ``http(s)``/``mailto`` URLs
+  are skipped — CI has no network and the checker must stay hermetic);
+* every fragment link ``[text](#anchor)`` / ``[text](file.md#anchor)``
+  names a real heading anchor in the target file, using GitHub's
+  slugification (lowercase, spaces to dashes, punctuation dropped);
+* every *inline-code path reference* like ```src/repro/core/vecreplay.py``
+  or ``tests/test_vecreplay.py`` points at a real file, so the docs
+  cannot silently drift from the tree they describe.
+
+Exit status 0 when clean, 1 with one ``file:line: message`` per problem
+otherwise.  Wired as ``make docs-check`` and run in the blocking tier-1
+CI job.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: Files checked: the index README plus everything under docs/.
+DOC_FILES = ["README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+CODE_PATH_RE = re.compile(
+    r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.(?:py|md|json|txt|yml|toml))`"
+)
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug transform."""
+    # Strip inline-code backticks and link syntax first.
+    text = heading.strip()
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = text.replace("`", "")
+    text = text.lower()
+    # Keep word chars, spaces and dashes; drop the rest.
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def collect_anchors(path: Path) -> set:
+    anchors = set()
+    seen: dict = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(path: Path, problems: list) -> None:
+    rel = path.relative_to(ROOT)
+    in_fence = False
+    for lineno, line in enumerate(
+        path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("../../actions/"):
+                continue  # CI badge, relative to the GitHub UI not the tree
+            base, _, frag = target.partition("#")
+            if base:
+                resolved = (path.parent / base).resolve()
+                if not resolved.exists():
+                    problems.append(
+                        f"{rel}:{lineno}: broken link '{target}' "
+                        f"({base} not found)"
+                    )
+                    continue
+            else:
+                resolved = path
+            if frag and resolved.suffix == ".md":
+                if frag not in collect_anchors(resolved):
+                    problems.append(
+                        f"{rel}:{lineno}: broken anchor '#{frag}' "
+                        f"in {resolved.relative_to(ROOT)}"
+                    )
+        for m in CODE_PATH_RE.finditer(line):
+            ref = m.group(1)
+            # Only check repo-shaped references (known top-level dirs);
+            # things like `repro.core.basefs` module dotted paths don't
+            # match the regex, and absolute/URL-ish strings are skipped.
+            head = ref.split("/", 1)[0]
+            if head not in {"src", "tests", "benchmarks", "docs",
+                            "examples", "tools"}:
+                continue
+            if not (ROOT / ref).exists():
+                problems.append(
+                    f"{rel}:{lineno}: dangling path reference `{ref}`"
+                )
+
+
+def main() -> int:
+    files = [ROOT / f for f in DOC_FILES]
+    docs_dir = ROOT / "docs"
+    if docs_dir.is_dir():
+        files.extend(sorted(docs_dir.glob("*.md")))
+    problems: list = []
+    for f in files:
+        if not f.exists():
+            problems.append(f"{f.relative_to(ROOT)}: missing")
+            continue
+        check_file(f, problems)
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(
+        f"docs-check: {len(files)} files, "
+        f"{len(problems)} problem(s)"
+    )
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
