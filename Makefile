@@ -18,7 +18,7 @@ FMT_PATHS := benchmarks/__init__.py \
 	src/repro/core/extents.py
 
 .PHONY: test test-fast lint docs-check bench bench-fig7 bench-fig8 \
-	bench-smoke perf perf-full analyze analyze-smoke
+	bench-smoke faults-smoke perf perf-full analyze analyze-smoke
 
 # Tier-1 verification target (same invocation as ROADMAP.md).
 test:
@@ -65,6 +65,13 @@ bench-fig8:
 bench-smoke:
 	$(PYTHON) -m pytest -x -q tests/test_bench_smoke.py
 
+# Fault-plane gate (blocking in CI; dep-free): the shrunken fig9 grid
+# with its claims (retries paid, never-faster, graceful degradation,
+# per-seed determinism) plus the COMMIT lossy-recovery negative control
+# (honest failover replay stays race-free; lossy loss is witnessed).
+faults-smoke:
+	$(PYTHON) -m benchmarks.fig9_faults --smoke
+
 # Static-analysis gate (blocking in CI): DES-invariant lint + fast-grid
 # race checks of every figure's traces + a small seeded litmus fuzz.
 analyze-smoke:
@@ -77,11 +84,13 @@ analyze:
 	$(PYTHON) -m repro.analysis --fig all --full --fuzz 200 --minimize \
 		--lint --out ANALYSIS.txt
 
-# Wall-clock / peak-RSS harness (BENCH_pr8.json): fast grid, both data
+# Wall-clock / peak-RSS harness (BENCH_pr9.json): fast grid, both data
 # planes (extent vs byte-moving materialize), scalar vs vector replay
-# per figure, plus the 65536-client fig7_big vectorized-replay scale
-# point.  BENCH_pr4.json / BENCH_pr5.json are the frozen earlier
-# captures (the PR-5 hot-path before/after lives under hotpath_pr5).
+# per figure, the 65536-client fig7_big vectorized-replay scale point,
+# plus the fig9 fault-plane point (scalar-only: fault ledgers are
+# UnsupportedLedger for the vector engine).  BENCH_pr4.json /
+# BENCH_pr5.json / BENCH_pr8.json are the frozen earlier captures (the
+# PR-5 hot-path before/after lives under hotpath_pr5).
 perf:
 	$(PYTHON) -m benchmarks.perf --grid fast
 

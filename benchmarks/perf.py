@@ -27,6 +27,12 @@ engine, bitwise-identical results), and the ``fig7_big`` point prices
 RN-R at 65536 clients (131072 on the full grid) — the scale the scalar
 loop made impractical — on the extent plane only.
 
+PR 9 adds the ``fig9`` point: the same CC-R shape priced under the
+injected fault plane (``docs/FAULTS.md``, drop_rate=0.2) — the cost of
+fault stamping at execution time plus retry/failover pricing at replay
+time.  Fault ledgers are scalar-only (``UnsupportedLedger`` fallback),
+so the point reports no vector columns.
+
     PYTHONPATH=src python -m benchmarks.perf [--grid fast|full]
         [--figs fig3,...] [--modes extent,materialize] [--out PATH]
 
@@ -52,11 +58,12 @@ from typing import Callable, Dict, List, Optional
 from benchmarks.common import KB, MB
 from repro.core.basefs import BaseFS
 from repro.core.costmodel import CostModel
+from repro.core.faults import FaultSchedule
 from repro.io.scr import SCRConfig, run_scr
 from repro.io.workloads import cc_r, cn_w, rn_r, rn_r_hot, run_workload, set_topology
 
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
-OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr8.json"))
+OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr9.json"))
 MODES = ("extent", "materialize")
 
 
@@ -81,9 +88,12 @@ def _workload_point(cfg, **overrides) -> Callable[[], Dict]:
     def measure() -> Dict:
         timings: Dict = {}
         fs = BaseFS(num_shards=overrides.get("shards"),
-                    adaptive=overrides.get("adaptive"))
+                    adaptive=overrides.get("adaptive"),
+                    faults=overrides.get("faults"))
         run_workload(cfg, fs=fs, timings=timings)
-        _time_vector_replay(fs.ledger, timings)
+        if fs.faults is None:
+            # Fault-stamped ledgers are scalar-only (UnsupportedLedger).
+            _time_vector_replay(fs.ledger, timings)
         return timings
 
     return measure
@@ -166,6 +176,12 @@ def _points(grid: str) -> Dict[str, Dict]:
         "fig8": {
             "point": f"RN-R-hot commit 8KB, 8 shards adaptive, {16 * hot_nodes} clients",
             "measure": _workload_point(cfg8, shards=8, adaptive=True),
+        },
+        "fig9": {
+            "point": f"CC-R commit 8MB under faults (drop_rate=0.2), "
+                     f"{nodes} nodes x 12p x 10 ops",
+            "measure": _workload_point(
+                cfg4, faults=FaultSchedule(drop_rate=0.2)),
         },
     }
 
@@ -265,7 +281,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     if os.path.exists(args.out):
         with open(args.out) as f:
             doc = json.load(f)
-    doc.setdefault("pr", 8)
+    doc.setdefault("pr", 9)
     doc.setdefault(
         "note",
         "Wall-clock + peak-RSS per figure, extent (zero-copy) vs "
@@ -275,7 +291,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         "one-time lowering, replay_vector_warm_s with the lowering "
         "cached (the re-pricing path), replay_speedup(_warm) the "
         "scalar/vector ratios on the extent plane; fig7_big is the "
-        "65536-client vectorized-replay scale point.  See "
+        "65536-client vectorized-replay scale point; fig9 is the "
+        "fault-plane point (docs/FAULTS.md; fault ledgers price on the "
+        "scalar engine only, so it has no vector columns).  See "
         "benchmarks/perf.py.",
     )
     # Merge per figure: a partial --figs/--modes run refreshes only the

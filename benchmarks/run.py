@@ -38,7 +38,7 @@ import sys
 import time
 
 from benchmarks import (fig3_write, fig4_read, fig5_scr, fig6_dl,
-                        fig7_shard, fig8_hot, roofline)
+                        fig7_shard, fig8_hot, fig9_faults, roofline)
 from benchmarks.common import print_table, save_csv
 from repro.io import workloads
 
@@ -64,6 +64,11 @@ FIGS = {
              "routing (RN-R-hot 8KB)",
              ("workload", "clients", "shards", "routing", "model",
               "read_bw", "rpc_query", "rpc_migrate", "verified")),
+    "fig9": (fig9_faults, "Fig 9: consistency models under the injected "
+             "fault plane (CC-R 8KB)",
+             ("model", "ack_window", "fault", "drop_rate", "write_bw",
+              "read_bw", "p99_read_ms", "rpc_msgs", "rpc_retries",
+              "rpc_replay", "failovers", "degraded_ms", "verified")),
 }
 
 
@@ -117,8 +122,21 @@ def main(argv=None) -> int:
                          "the zero-copy extent plane with symbolic "
                          "verification)")
     ap.add_argument("--seed", type=int, default=0,
-                    help="seed for skewed-offset generators (fig8)")
+                    help="seed for skewed-offset generators (fig8) and "
+                         "the fault plane (--faults, fig9)")
+    ap.add_argument("--faults", type=float, default=None, metavar="RATE",
+                    help="inject the seeded fault plane into figs 3-6: "
+                         "every RPC wire message is dropped with "
+                         "probability RATE and retried with timeout + "
+                         "exponential backoff (docs/FAULTS.md).  fig7/"
+                         "fig8 pin their own topology and fig9 sweeps "
+                         "the fault plane itself; they ignore this flag")
     args = ap.parse_args(argv)
+
+    if args.faults is not None and not 0.0 <= args.faults < 1.0:
+        print(f"--faults must be in [0, 1): {args.faults}",
+              file=sys.stderr)
+        return 2
 
     wanted = [w for w in args.only.split(",") if w] or list(FIGS)
     unknown = [w for w in wanted if w not in FIGS]
@@ -133,6 +151,10 @@ def main(argv=None) -> int:
         stripe=args.stripe, adaptive=args.adaptive,
         materialize=args.materialize, ack_window=args.ack_window,
     )
+    if args.faults is not None:
+        from repro.core.faults import FaultSchedule
+        workloads.set_topology(
+            faults=FaultSchedule(seed=args.seed, drop_rate=args.faults))
     workloads.set_replay_engine(args.engine)
 
     all_pass = True

@@ -24,6 +24,14 @@ primitives and hand-build ledgers):
   through the batcher/server so the DES prices it (and so
   ``Event.deps`` edges are stamped).  A stray hand-recorded RPC event
   would be free traffic.
+* **ANA004 — fault stamps come from the fault plane.**  ``retries=`` /
+  ``failover=`` keywords on ``record(...)`` / ``Event(...)`` calls are
+  allowed only in ``core/basefs.py`` and ``core/faults.py``: the
+  ledger stamps them from the seeded :class:`FaultSchedule` when the
+  RPC is recorded (``docs/FAULTS.md``).  Hand-stamped fault metadata
+  anywhere else would be retries the schedule never drew — priced
+  delay without an injected fault, breaking per-seed determinism and
+  the ``faults=None`` bitwise-identity guarantee.
 
 ``run_lint()`` returns violations; the CLI (``python -m repro.analysis
 --lint``) and the blocking ``make analyze-smoke`` CI step exit nonzero
@@ -46,6 +54,10 @@ _ANA001_ALLOWED = ("src/repro/core/consistency.py",
                    "src/repro/core/basefs.py")
 #: Files where ANA003 may record EventKind.RPC directly.
 _ANA003_ALLOWED = ("src/repro/core/basefs.py",)
+#: Files where ANA004 may stamp fault metadata on events.
+_ANA004_ALLOWED = ("src/repro/core/basefs.py", "src/repro/core/faults.py")
+#: Keywords ANA004 guards on record()/Event() calls.
+_FAULT_KEYWORDS = frozenset({"retries", "failover"})
 #: Class-body assignments ANA002 requires of every layer.
 _LAYER_DECLS = ("name", "sync_points", "consumer_edges", "sync_op_kinds")
 
@@ -96,6 +108,17 @@ def _lint_calls(tree: ast.AST, rel: str, out: List[Violation]) -> None:
                 "ANA003", rel, node.lineno,
                 "hand-recorded EventKind.RPC event — RPCs must go "
                 "through the batcher/server so the DES prices them"))
+        if (name in ("record", "Event") and rel not in _ANA004_ALLOWED):
+            stamped = sorted(
+                kw.arg for kw in node.keywords
+                if kw.arg in _FAULT_KEYWORDS)
+            if stamped:
+                out.append(Violation(
+                    "ANA004", rel, node.lineno,
+                    f"hand-stamped fault metadata ({', '.join(stamped)}) "
+                    "— retry/failover stamps come from the seeded "
+                    "FaultSchedule inside core/basefs.py, never from "
+                    "callers"))
 
 
 def _lint_layer_decls(tree: ast.AST, rel: str,

@@ -205,9 +205,31 @@ class TracingLayer:
         return data
 
     # ---- sync ops (Table-4 fence classes) --------------------------------
+    def _lost_before(self, fh) -> int:
+        """Pending-loss count for ``fh``'s client under a lossy fault plane.
+
+        A *lossy* failover (``FaultSchedule(lossy=True)``) silently drops
+        in-flight attach batches instead of replaying them, so the
+        publishing sync op the application believes it performed never
+        reached stable metadata.  The tracer must not record a sync edge
+        the storage system did not actually provide — that honesty is what
+        lets the race checker witness the resulting data race.
+        """
+        faults = getattr(self.fs, "faults", None)
+        if faults is None or not faults.schedule.lossy:
+            return -1
+        return faults.lost_count(fh.client.id)
+
+    def _sync_unless_lost(self, fh, before: int, kind) -> None:
+        faults = getattr(self.fs, "faults", None)
+        if before >= 0 and faults.lost_count(fh.client.id) > before:
+            return  # publish was dropped by a lossy failover: no sync edge
+        self.tracer.sync(fh.client.id, fh.path, kind)
+
     def commit(self, fh):
+        before = self._lost_before(fh)
         rc = self.inner.commit(fh)
-        self.tracer.sync(fh.client.id, fh.path, self.sync_op_kinds["commit"])
+        self._sync_unless_lost(fh, before, self.sync_op_kinds["commit"])
         return rc
 
     def session_open(self, fh):
@@ -217,13 +239,15 @@ class TracingLayer:
         return rc
 
     def session_close(self, fh):
+        before = self._lost_before(fh)
         rc = self.inner.session_close(fh)
-        self.tracer.sync(fh.client.id, fh.path,
-                         self.sync_op_kinds["session_close"])
+        self._sync_unless_lost(fh, before,
+                               self.sync_op_kinds["session_close"])
         return rc
 
     def file_sync(self, fh):
+        before = self._lost_before(fh)
         rc = self.inner.file_sync(fh)
-        self.tracer.sync(fh.client.id, fh.path,
-                         self.sync_op_kinds["file_sync"])
+        self._sync_unless_lost(fh, before,
+                               self.sync_op_kinds["file_sync"])
         return rc

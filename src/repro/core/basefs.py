@@ -99,6 +99,16 @@ class Event:
     # fired before later members were issued — batch *membership* is
     # time-driven, not ledger-order-driven.  Empty for unqueued traffic.
     members: Tuple[Tuple[int, int], ...] = ()
+    # Fault-plane stamps (:mod:`repro.core.faults`): how many times this
+    # wire message was dropped before succeeding (the DES prices each
+    # attempt as timeout + exponential backoff and counts it in
+    # ``rpc_msgs`` — retries are never free), and whether this message
+    # tripped a shard-master failover (the DES prices the recovery
+    # window at that shard).  Always 0 with ``faults=None``; only the
+    # ledger itself and the batcher's recovery path may set these
+    # (lint rule ANA004).
+    retries: int = 0
+    failover: int = 0
 
 
 class EventLedger:
@@ -132,6 +142,11 @@ class EventLedger:
         self._count_by_type: Dict[Tuple[EventKind, str], int] = {}
         self._count_by_kind: Dict[EventKind, int] = {}
         self._bytes_by_kind: Dict[EventKind, int] = {}
+        # Fault plane (:mod:`repro.core.faults`): the run's FaultState,
+        # attached by ``BaseFS(faults=...)``.  record() stamps every RPC
+        # wire message through it; None (the default) is the fault-free
+        # model and changes nothing.
+        self.faults = None
 
     def record(self, kind: EventKind, client: int, nbytes: int = 0,
                rpc_type: str = "", peer: int = -1, rpc_ranges: int = 1,
@@ -139,14 +154,26 @@ class EventLedger:
                linger: float = 0.0, deps: Tuple[int, ...] = (),
                opened_after: int = -1, last_after: int = -1,
                forced_after: int = -1,
-               members: Tuple[Tuple[int, int], ...] = ()) -> None:
+               members: Tuple[Tuple[int, int], ...] = (),
+               retries: int = 0, failover: int = 0) -> None:
         for hook in self.pre_record:
             hook(kind, client)
+        # Every RPC wire message passes through the fault plane at its
+        # recording position: the stamp draw is counter-keyed off the
+        # schedule seed, so the ledger is deterministic per seed.  The
+        # client-side fence marker carries no wire message and is exempt.
+        if (self.faults is not None and kind is EventKind.RPC
+                and rpc_type != RPC_FENCE_MARKER):
+            r, f = self.faults.on_rpc(rpc_type, shard)
+            retries += r
+            if f:
+                failover = 1
         seq = next(self._seq)
         self.events.append(
             Event(kind, client, nbytes, rpc_type, peer, seq,
                   rpc_ranges, shard, rpc_calls, flush, linger, deps,
-                  opened_after, last_after, forced_after, members)
+                  opened_after, last_after, forced_after, members,
+                  retries, failover)
         )
         self.last_seq[client] = seq
         key = (kind, rpc_type)
@@ -181,6 +208,11 @@ class EventLedger:
         self._count_by_kind.clear()
         self._bytes_by_kind.clear()
         self.__dict__.pop("_vec_lowered", None)
+        # Restart the fault counters with the events: a reused ledger
+        # re-runs the same seeded schedule from message 0, so identical
+        # post-clear workloads get identical stamps.
+        if self.faults is not None:
+            self.faults.reset()
 
     # ---- aggregate views used by tests and the cost model ----
     def count(self, kind: EventKind, rpc_type: Optional[str] = None) -> int:
@@ -283,6 +315,15 @@ SYNC_FLUSH = (FLUSH_FENCE, FLUSH_CLOSE)
 #: master/worker occupancy.
 RPC_FENCE_MARKER = "fence"
 
+#: rpc_type of a failover-recovery retransmission: a fire-and-forget
+#: attach batch that was in flight to a shard master when it crashed has
+#: an unknown fate, so the client REPLAYS it — idempotently, attaches
+#: are range upserts — at its next synchronization point, once the
+#: standby master has taken over.  Recorded unqueued (blocking), so the
+#: DES prices a full round trip at the recovered master and drains the
+#: client's ack window there.  See :mod:`repro.core.faults`.
+RPC_REPLAY = "replay"
+
 #: Default coalescing window when batching is enabled (seconds).
 DEFAULT_LINGER = 50e-6
 
@@ -368,6 +409,12 @@ class RPCBatcher:
         # an EMPTY queue still needs a sync marker so the DES drains the
         # ack window (content was applied eagerly; only timing is owed).
         self._unsynced: Dict[int, int] = {}
+        # Fault plane only: per-client detail of those unacked flushes —
+        # ``(shard, nbytes, nranges, shard_was_already_failed_over)`` per
+        # batch — so the next sync point can decide which were in flight
+        # to a master that crashed under them and must be replayed (or,
+        # under a lossy schedule, are silently lost).  See _recover().
+        self._unsynced_rpcs: Dict[int, List[Tuple[int, int, int, bool]]] = {}
         # Interned (type, path, shard) keys: the streaming hot path
         # re-submits the same key thousands of times per client, and the
         # interned tuple makes the queue-key comparison an identity hit.
@@ -379,7 +426,11 @@ class RPCBatcher:
         self.flush_all(FLUSH_BARRIER)
         # A global barrier quiesces the RPC plane: the DES drains every
         # client's outstanding acks into the phase end, so nothing stays
-        # unsynced across it.
+        # unsynced across it — including failover recovery of batches
+        # whose master crashed mid-phase.
+        if self.ledger.faults is not None:
+            for client in list(self._unsynced_rpcs):
+                self._recover(client)
         self._unsynced.clear()
 
     @property
@@ -403,10 +454,23 @@ class RPCBatcher:
         q = self._open.pop(client, None)
         if q is None:
             return None
+        rpc_type, _path, shard = q.key
+        faults = self.ledger.faults
+        if faults is not None and (rpc_type != "attach"
+                                   or reason in SYNC_FLUSH):
+            # This flush synchronizes the client (it blocks on the
+            # answer / the fence semantics): failover recovery of its
+            # earlier in-flight batches happens FIRST, so the replay
+            # round trips are ordered before the sync RPC in the chain.
+            self._recover(client)
+        # Snapshot the shard's failover state BEFORE recording: the
+        # recorded message itself may be the one that trips the crash,
+        # and a batch sent to the crashing master (not to the already-
+        # recovered standby) is the one whose fate is unknown.
+        crashed_before = faults is not None and faults.is_crashed(shard)
         forced_after = -1
         if forced_by is not None and forced_by != client:
             forced_after = self.ledger.last_seq.get(forced_by, -1)
-        rpc_type, _path, shard = q.key
         self.ledger.record(
             EventKind.RPC, client, q.nbytes, rpc_type=rpc_type,
             rpc_ranges=q.nranges, shard=shard, rpc_calls=q.calls,
@@ -419,12 +483,44 @@ class RPCBatcher:
                 # Fire-and-forget: the ack may still be outstanding when
                 # the next fence arrives.
                 self._unsynced[client] = self._unsynced.get(client, 0) + 1
+                if faults is not None:
+                    self._unsynced_rpcs.setdefault(client, []).append(
+                        (shard, q.nbytes, q.nranges, crashed_before))
             else:
                 # Query flushes (a dependent read consumes the answer),
                 # fences and drain closes synchronize the client in the
                 # DES — everything before them is acked.
                 self._unsynced.pop(client, None)
         return self.ledger.events[-1].seq
+
+    def _recover(self, client: int) -> None:
+        """Failover recovery at a synchronization point (fault plane).
+
+        Every fire-and-forget attach batch the client flushed to a shard
+        master that CRASHED after the send (``Event.failover`` tripped
+        between flush and this sync point) is replayed as a blocking
+        ``RPC_REPLAY`` round trip to the standby — attaches are
+        idempotent range upserts, so replay is the correct per-model
+        recovery for commit/session/MPI fences alike.  Under a ``lossy``
+        schedule the batches are dropped instead and noted on the fault
+        state, so the execution tracer refuses to count the fence as a
+        formal sync op (the race-checker negative control).  Batches
+        sent AFTER the failover went to the healthy standby and need
+        nothing.
+        """
+        faults = self.ledger.faults
+        pend = self._unsynced_rpcs.pop(client, None)
+        if faults is None or not pend:
+            return
+        for shard, nbytes, nranges, crashed_before in pend:
+            if crashed_before or not faults.is_crashed(shard):
+                continue
+            if faults.schedule.lossy:
+                faults.note_lost(client, shard, nbytes, nranges)
+            else:
+                self.ledger.record(EventKind.RPC, client, nbytes,
+                                   rpc_type=RPC_REPLAY, rpc_ranges=nranges,
+                                   shard=shard, failover=1)
 
     def flush_all(self, reason: str) -> None:
         for client in list(self._open):
@@ -440,6 +536,8 @@ class RPCBatcher:
         they are.  A zero-cost sync marker is recorded for the DES then.
         """
         flushed = self.flush(client, FLUSH_FENCE)
+        if flushed is None and self.ledger.faults is not None:
+            self._recover(client)
         if (self.ack_window > 0 and flushed is None
                 and self._unsynced.pop(client, None)):
             self.ledger.record(EventKind.RPC, client, 0,
@@ -491,11 +589,14 @@ class RPCBatcher:
         (carried on the recorded event, or accumulated into the queue)."""
         if not (self.enabled and rpc_type in self.BATCHABLE):
             self.flush(client, FLUSH_SWITCH)
+            # An unqueued RPC blocks the chain on its round trip — a sync
+            # point: failover recovery first, then the RPC, then the DES
+            # drains the ack window at it.
+            if self.ledger.faults is not None:
+                self._recover(client)
             self.ledger.record(EventKind.RPC, client, nbytes,
                                rpc_type=rpc_type, rpc_ranges=nranges,
                                shard=shard, deps=deps)
-            # An unqueued RPC blocks the chain on its round trip, which
-            # the DES treats as a sync point draining the ack window.
             self._unsynced.pop(client, None)
             return
         raw = (rpc_type, path, shard)
@@ -757,7 +858,12 @@ class BFSClient:
 #: on the same deployment.
 TOPOLOGY = {"shards": 1, "batch": 0, "linger": None, "ack_window": 0,
             "stripe": DEFAULT_STRIPE, "adaptive": False,
-            "materialize": False}
+            "materialize": False, "faults": None}
+
+#: Sentinel for ``set_topology(faults=...)``: unlike the other knobs,
+#: ``None`` is a meaningful faults value (fault-free), so "leave as is"
+#: needs its own marker.
+_KEEP = object()
 
 
 def set_topology(shards: Optional[int] = None,
@@ -766,7 +872,8 @@ def set_topology(shards: Optional[int] = None,
                  stripe: Optional[int] = None,
                  adaptive: Optional[bool] = None,
                  materialize: Optional[bool] = None,
-                 ack_window: Optional[int] = None) -> None:
+                 ack_window: Optional[int] = None,
+                 faults: object = _KEEP) -> None:
     """Set process-wide defaults for the simulated deployment."""
     if shards is not None:
         TOPOLOGY["shards"] = shards
@@ -782,6 +889,8 @@ def set_topology(shards: Optional[int] = None,
         TOPOLOGY["materialize"] = materialize
     if ack_window is not None:
         TOPOLOGY["ack_window"] = ack_window
+    if faults is not _KEEP:
+        TOPOLOGY["faults"] = faults
 
 
 class BaseFS:
@@ -813,10 +922,22 @@ class BaseFS:
                  linger: Optional[float] = None,
                  adaptive: Optional[bool] = None,
                  materialize: Optional[bool] = None,
-                 ack_window: Optional[int] = None) -> None:
+                 ack_window: Optional[int] = None,
+                 faults: Optional[object] = None) -> None:
         self.ledger = EventLedger()
         ack = TOPOLOGY["ack_window"] if ack_window is None else ack_window
         self.ledger.ack_window = max(0, int(ack))
+        # Fault plane (:mod:`repro.core.faults`): ``faults`` is a seeded
+        # FaultSchedule (or an already-started FaultState to share across
+        # deployments); ``None`` falls back to the process topology, and
+        # an absent/None schedule is the fault-free model — record() and
+        # replay stay bitwise-identical to the golden ledgers then.
+        sched = TOPOLOGY["faults"] if faults is None else faults
+        if sched is not None:
+            self.faults = sched.start() if hasattr(sched, "start") else sched
+            self.ledger.faults = self.faults
+        else:
+            self.faults = None
         self.server = GlobalServer(
             self.ledger, num_workers=num_workers,
             num_shards=TOPOLOGY["shards"] if num_shards is None else num_shards,

@@ -87,11 +87,41 @@ at the flush slot and keeps streaming.  The chain stalls only when
   ``fence`` marker the batcher records when a consistency fence finds
   an empty queue — each drains every outstanding ack first.
 
+Send credits are PER CONNECTION (client, shard) by default
+(``ack_scope="connection"``): each client-to-shard-master FIFO link has
+its own K-deep credit window, so a slow or failed-over shard stalls
+only the sends on its own link while the client keeps streaming to
+healthy shards.  Synchronization points still drain EVERY connection of
+the client.  With a single shard the two scopes coincide bitwise;
+``ack_scope="global"`` retains the legacy one-gate-per-client model for
+comparison.
+
 Phase barriers quiesce the RPC plane: outstanding acks extend the phase
 end and are cleared.  Cross-client visibility stays exact: consumers'
 ``Event.deps`` edges still block their service on the producers'
 flushes at the shard masters.  ``ack_window=0`` reproduces the blocking
 model bitwise.
+
+Fault pricing (``faults``)
+--------------------------
+A ledger recorded under a seeded :class:`~repro.core.faults.
+FaultSchedule` carries per-event stamps (``Event.retries`` /
+``Event.failover``) decided at execution time; the replay prices them
+(``faults=None`` resolves the schedule from ``ledger.faults``; pass an
+explicit schedule to re-price the same stamps under different timing
+constants):
+
+* each of a message's ``retries`` failed attempts delays its successful
+  send by ``rpc_timeout + backoff_base * 2**attempt`` and counts as a
+  wire message in ``rpc_msgs`` (and ``rpc_retries``) — retries are
+  never free;
+* the first ``failover``-stamped message serviced at a shard prices a
+  ``recovery_window`` blackout at that shard's master (standby
+  promotion) and counts in ``failovers``;
+* ``slow_shards`` multiplies a shard's master/worker service times; the
+  excess is accounted in ``degraded_time``.
+
+Full rules and the recovery semantics live in ``docs/FAULTS.md``.
 
 Cross-client dependency edges
 -----------------------------
@@ -186,6 +216,14 @@ class PhaseResult:
     # exceed ``rpc_count`` — the honest wire traffic under time-driven
     # membership (client-side fence markers are free and not counted).
     rpc_msgs: int = 0
+    # Fault plane (``docs/FAULTS.md``): failed wire attempts priced in
+    # the phase (each also counted in ``rpc_msgs``), shard-master
+    # failovers whose recovery window was priced in the phase, and the
+    # total extra service seconds charged by slow-shard (degraded
+    # service) multipliers.  All zero under ``faults=None``.
+    rpc_retries: int = 0
+    failovers: int = 0
+    degraded_time: float = 0.0
 
     def bandwidth(self, *kinds: EventKind) -> float:
         """Aggregate B/s over the phase for the given event kinds."""
@@ -263,6 +301,8 @@ class CostModel:
                record_splits: Optional[Dict[int, Tuple[int, ...]]] = None,
                exec_splits: Optional[Dict[int, Tuple[int, ...]]] = None,
                engine: str = "scalar",
+               faults: Optional[object] = None,
+               ack_scope: str = "connection",
                ) -> List[PhaseResult]:
         """Price the ledger; optionally append per-event ``(event, start,
         finish)`` DES times to ``trace`` (for a flushed batch, ``start``
@@ -304,10 +344,28 @@ class CostModel:
         sub-batch messages — recomputing the splits under relaxed costs
         could change the message count and break pointwise dominance.
         The same record/exec pair makes ack-window comparisons sound
-        (the ``ack_window`` monotonicity property tests rely on it)."""
+        (the ``ack_window`` monotonicity property tests rely on it).
+
+        ``faults`` prices a fault-stamped ledger (see the module
+        docstring and ``docs/FAULTS.md``); ``None`` resolves the
+        schedule from ``ledger.faults``, so a ledger recorded under
+        ``BaseFS(faults=...)`` prices its own schedule by default.
+        ``ack_scope`` selects per-``"connection"`` (client, shard) send
+        credits — the default FIFO-link model — or the legacy
+        ``"global"`` one-gate-per-client window."""
         if engine not in ("scalar", "vector"):
             raise ValueError(f"unknown replay engine {engine!r}")
+        if ack_scope not in ("connection", "global"):
+            raise ValueError(f"unknown ack_scope {ack_scope!r}")
         if engine == "vector":
+            if faults is not None or ack_scope != "connection":
+                # A ledger-attached schedule falls back to the scalar
+                # path automatically (lower() raises UnsupportedLedger);
+                # only explicit scalar-only arguments are an error here.
+                raise ValueError(
+                    "engine='vector' supports neither an explicit "
+                    "faults= override nor ack_scope='global'; use "
+                    "engine='scalar'")
             diagnostics = (trace, flush_trace, record_order, exec_order,
                            record_splits, exec_splits)
             if any(d is not None for d in diagnostics):
@@ -322,6 +380,13 @@ class CostModel:
                     honor_edges=honor_edges)
             except vecreplay.UnsupportedLedger:
                 pass  # fall through to the scalar reference path
+        if faults is None:
+            faults = getattr(ledger, "faults", None)
+        fsched = (getattr(faults, "schedule", faults)
+                  if faults is not None else None)
+        slow: Dict[int, float] = (dict(fsched.slow_shards)
+                                  if fsched is not None else {})
+        per_conn = ack_scope == "connection"
         hw = self.hw
         node_of = dict(ledger.client_node)
         # Split the ledger at markers into phases.
@@ -357,12 +422,35 @@ class CostModel:
                 table[key] = _Resource()
             return table[key]
 
-        def service(shard: int, arrive: float, nranges: int) -> float:
+        # Fault-pricing accumulators (docs/FAULTS.md).  ``failover_paid``
+        # persists across phases — a shard fails over once; the other
+        # cells are per-phase deltas snapshotted around each phase.
+        failover_paid: Set[int] = set()
+        degraded_acc = [0.0]
+        failover_acc = [0]
+
+        def service(shard: int, arrive: float, nranges: int,
+                    failover: bool = False) -> float:
             """Master dispatch + round-robin worker task for one RPC
             message at ``shard``; returns the server-side completion."""
-            dispatched = res(shard_master, shard).reserve(
-                arrive, hw.server_occupancy
-            )
+            occ = hw.server_occupancy
+            task = hw.task_service + max(1, nranges) * hw.task_per_range
+            if slow:
+                m = slow.get(shard)
+                if m is not None:
+                    degraded_acc[0] += (occ + task) * (m - 1.0)
+                    occ *= m
+                    task *= m
+            master = res(shard_master, shard)
+            if failover and fsched is not None and shard not in failover_paid:
+                # First message serviced at the crashed master: the
+                # standby's promotion blackout delays everything queued
+                # behind it (recorded once per shard).
+                failover_paid.add(shard)
+                failover_acc[0] += 1
+                master.avail = (max(master.avail, arrive)
+                                + fsched.recovery_window)
+            dispatched = master.reserve(arrive, occ)
             if shard not in shard_workers:
                 shard_workers[shard] = [
                     _Resource() for _ in range(hw.server_workers)
@@ -372,10 +460,7 @@ class CostModel:
             rr = shard_rr[shard]
             # Batched RPCs carry many range descriptors in one
             # round-trip; the worker pays per descriptor.
-            done = workers[rr].reserve(
-                dispatched,
-                hw.task_service + max(1, nranges) * hw.task_per_range,
-            )
+            done = workers[rr].reserve(dispatched, task)
             shard_rr[shard] = (rr + 1) % len(workers)
             return done
 
@@ -400,12 +485,28 @@ class CostModel:
         chain_done: Dict[int, float] = {}
         effect_done: Dict[int, float] = {}
         op_ptr = 0  # consumed prefix of ``exec_order`` (forced replays)
-        # Ack-window state: per-client heap of outstanding (unacked)
-        # fire-and-forget flush responses.  Drained by sync points and
-        # at phase barriers (which extend the phase end accordingly).
+        # Ack-window state: per-client, per-connection heaps of
+        # outstanding (unacked) fire-and-forget flush responses.  The
+        # connection key is the destination shard (``ack_scope=
+        # "connection"``, the FIFO-link model) or 0 (``"global"``, the
+        # legacy one-gate-per-client window — identical whenever one
+        # shard is in play).  The credit gate pops only its own
+        # connection's heap; sync points and phase barriers drain every
+        # connection of the client.
         ack_K = (getattr(ledger, "ack_window", 0) if ack_window is None
                  else max(0, ack_window))
-        unacked: Dict[int, List[float]] = {}
+        unacked: Dict[int, Dict[int, List[float]]] = {}
+
+        def drain_acks(c: int, t: float) -> float:
+            """Synchronize client ``c``: wait out every outstanding ack
+            on every connection; returns the advanced clock."""
+            conns = unacked.get(c)
+            if conns:
+                for pend in conns.values():
+                    if pend:
+                        t = max(t, max(pend))
+                        pend.clear()
+            return t
 
         for name, events in phases:
             # Per-client chains, concurrent within the phase.
@@ -417,9 +518,12 @@ class CostModel:
             bytes_by_kind: Dict[EventKind, int] = {}
             rpc_count = 0
             rpc_msgs = 0
+            rpc_retries = 0
+            degraded0 = degraded_acc[0]
+            failover0 = failover_acc[0]
 
             def execute(e: Event) -> None:
-                nonlocal rpc_count, rpc_msgs
+                nonlocal rpc_count, rpc_msgs, rpc_retries
                 c = e.client
                 t = clock[c]
                 start = t
@@ -464,10 +568,7 @@ class CostModel:
                     # an empty send queue while fire-and-forget flushes
                     # were still unacked — the chain drains them here.
                     # No server traffic, no wire message.
-                    pend = unacked.get(c)
-                    if pend:
-                        t = max(t, max(pend))
-                        pend.clear()
+                    t = drain_acks(c, t)
                 elif k is EventKind.RPC and e.flush:
                     rpc_count += 1
                     # Time-driven send queue: reconstruct every member's
@@ -515,7 +616,11 @@ class CostModel:
                     # their answer (a dependent read consumes it).
                     is_async = (ack_K > 0 and e.rpc_type == "attach"
                                 and e.flush not in SYNC_FLUSH)
-                    heap = unacked.setdefault(c, []) if ack_K > 0 else None
+                    if ack_K > 0:
+                        heap = unacked.setdefault(c, {}).setdefault(
+                            e.shard if per_conn else 0, [])
+                    else:
+                        heap = None
                     dep_ready = None
                     dep_wait = 0.0
                     if honor_edges and e.deps:
@@ -559,6 +664,13 @@ class CostModel:
                                 t_forced = t
                             send = max(t_last_g, min(t_forced,
                                                      t_open_g + W))
+                            if e.retries and fsched is not None:
+                                # The recorded close message was dropped
+                                # ``retries`` times: each failed attempt
+                                # pays the client-side timeout plus
+                                # exponential backoff before the
+                                # successful send departs.
+                                send += fsched.retry_delay(e.retries)
                         if is_async and heap is not None:
                             # Bounded send credit: with K flushes
                             # unacked, the next send (and the chain,
@@ -578,13 +690,18 @@ class CostModel:
                                 dep_wait = max(0.0, dep_ready - arrive)
                             arrive = max(arrive, dep_ready)
                         done = service(e.shard, arrive,
-                                       sum(mranges[lo:hi]))
+                                       sum(mranges[lo:hi]),
+                                       failover=bool(e.failover))
                         effect = done
                         resp = done + hw.rpc_net_lat
                         sends.append(send - hw.batch_flush_lat)
                         rpc_msgs += 1
                         if is_async and heap is not None:
                             heapq.heappush(heap, resp)
+                    if e.retries:
+                        # Failed attempts are real wire traffic.
+                        rpc_msgs += e.retries
+                        rpc_retries += e.retries
                     # The chain only blocks if it reaches the flush slot
                     # before the response is back: an early
                     # (timer-fired) flush overlaps client work — and a
@@ -592,10 +709,10 @@ class CostModel:
                     # response at all.
                     start = sends[0] if sends else t
                     if not is_async:
-                        if heap:
-                            # A sync-class flush drains the window.
-                            t = max(t, max(heap))
-                            heap.clear()
+                        if ack_K > 0:
+                            # A sync-class flush drains the window — on
+                            # every connection of the client.
+                            t = drain_acks(c, t)
                         t = max(t, resp)
                     if flush_trace is not None:
                         flush_trace.append(FlushTrace(
@@ -617,18 +734,25 @@ class CostModel:
                     # exactly the pre-batching model.  A blocking call
                     # is a sync point: outstanding fire-and-forget acks
                     # drain first (no-op at ack_window=0).
-                    pend = unacked.get(c)
-                    if pend:
-                        t = max(t, max(pend))
-                        pend.clear()
+                    t2 = drain_acks(c, t)
+                    if t2 > t:
+                        t = t2
                         start = t
                     send = t
+                    if e.retries and fsched is not None:
+                        # Dropped ``retries`` times before succeeding:
+                        # timeout + exponential backoff per attempt.
+                        send += fsched.retry_delay(e.retries)
+                    if e.retries:
+                        rpc_msgs += e.retries
+                        rpc_retries += e.retries
                     arrive = send + hw.rpc_net_lat
                     if honor_edges and e.deps:
                         arrive = max(arrive,
                                      max(effect_done.get(d, now)
                                          for d in e.deps))
-                    done = service(e.shard, arrive, e.rpc_ranges)
+                    done = service(e.shard, arrive, e.rpc_ranges,
+                                   failover=bool(e.failover))
                     t = done + hw.rpc_net_lat  # response to client
                     if e.seq in referenced:
                         effect_done[e.seq] = done
@@ -696,10 +820,11 @@ class CostModel:
                 # A phase barrier quiesces the RPC plane: outstanding
                 # fire-and-forget acks extend the phase end and are
                 # acked before the next phase starts.
-                for pend in unacked.values():
-                    if pend:
-                        end = max(end, max(pend))
-                        pend.clear()
+                for conns in unacked.values():
+                    for pend in conns.values():
+                        if pend:
+                            end = max(end, max(pend))
+                            pend.clear()
             results.append(
                 PhaseResult(
                     name=name,
@@ -708,6 +833,9 @@ class CostModel:
                     rpc_count=rpc_count,
                     clients=len(chains),
                     rpc_msgs=rpc_msgs,
+                    rpc_retries=rpc_retries,
+                    failovers=failover_acc[0] - failover0,
+                    degraded_time=degraded_acc[0] - degraded0,
                 )
             )
             now = end  # global barrier

@@ -55,7 +55,11 @@ is the reference oracle and the only consumer of those hooks.  Ledgers
 whose event seqs are not contiguous (hand-built ledgers that bypass
 :meth:`EventLedger.record`) raise :class:`UnsupportedLedger`;
 ``CostModel.replay(engine="vector")`` falls back to the scalar engine
-for them (documented in ``docs/REPLAY.md``).
+for them (documented in ``docs/REPLAY.md``).  Fault-stamped ledgers
+(``ledger.faults`` set, :mod:`repro.core.faults`) likewise raise
+:class:`UnsupportedLedger` and take the scalar fallback — vectorizing
+retry/failover pricing is follow-up work; the contract section "faults
+and the replay contract" in ``docs/REPLAY.md`` pins this.
 """
 
 from __future__ import annotations
@@ -75,7 +79,8 @@ __all__ = ["LoweredLedger", "UnsupportedLedger", "lower", "lowered_for",
 
 
 class UnsupportedLedger(ValueError):
-    """The ledger cannot be lowered (non-contiguous event seqs)."""
+    """The ledger cannot be lowered (non-contiguous event seqs, or a
+    fault-stamped ledger — retry/failover pricing is scalar-only)."""
 
 
 # Kind codes (column encoding of EventKind).
@@ -208,6 +213,10 @@ def _build_costs(L: LoweredLedger, hw) -> _Costs:
 
 def lower(ledger: EventLedger) -> LoweredLedger:
     """Lower a recorded ledger into struct-of-arrays columns."""
+    if getattr(ledger, "faults", None) is not None:
+        raise UnsupportedLedger(
+            "fault-stamped ledgers are priced by the scalar engine only "
+            "in this release (retry/failover columns are follow-up work)")
     events = ledger.events
     n = len(events)
     if n == 0:
@@ -430,7 +439,10 @@ def replay_vectorized(hw, ledger: EventLedger,
     chain: List[Optional[float]] = [None] * n
     effect: List[Optional[float]] = [None] * n
     done_f = bytearray(n)
-    unacked: Dict[int, List[float]] = {}
+    # Per-client, per-connection ack heaps (connection = dense shard id,
+    # a per-ledger bijection of the scalar engine's raw ``Event.shard``
+    # key — identical partition, bitwise-identical drains).
+    unacked: Dict[int, Dict[int, List[float]]] = {}
 
     # Loop-local bindings.
     op_l, r0_l, r1_l, si_l = L.op, L.r0, L.r1, L.si
@@ -558,9 +570,13 @@ def replay_vectorized(hw, ledger: EventLedger,
                 is_async = ack_K > 0 and asy_l[i]
                 heap_c = None
                 if ack_K > 0:
-                    heap_c = unacked.get(c)
+                    conns = unacked.get(c)
+                    if conns is None:
+                        conns = unacked[c] = {}
+                    s_key = si_l[i]
+                    heap_c = conns.get(s_key)
                     if heap_c is None:
-                        heap_c = unacked[c] = []
+                        heap_c = conns[s_key] = []
                 dep_ready = None
                 dpt = dep_t[i]
                 if honor_edges and dpt is not None:
@@ -631,22 +647,28 @@ def replay_vectorized(hw, ledger: EventLedger,
                         cpush(heap_c, resp)
                     gstart = gend
                 if not is_async:
-                    if heap_c:       # sync-class flush drains the window
-                        mh = max(heap_c)
-                        if mh > t:
-                            t = mh
-                        heap_c.clear()
+                    if ack_K > 0:    # sync-class flush drains EVERY
+                        conns = unacked.get(c)   # connection's window
+                        if conns:
+                            for pend in conns.values():
+                                if pend:
+                                    mh = max(pend)
+                                    if mh > t:
+                                        t = mh
+                                    pend.clear()
                     if resp > t:
                         t = resp
                 if ref_l[i]:
                     effect[i] = effect_v
             elif o == 3:             # unqueued RPC round trip
-                pend = unacked.get(c)
-                if pend:
-                    mp = max(pend)
-                    if mp > t:
-                        t = mp
-                    pend.clear()
+                conns = unacked.get(c)
+                if conns:
+                    for pend in conns.values():
+                        if pend:
+                            mp = max(pend)
+                            if mp > t:
+                                t = mp
+                            pend.clear()
                 arrive = t + rnl_
                 dpt = dep_t[i]
                 if honor_edges and dpt is not None:
@@ -680,12 +702,14 @@ def replay_vectorized(hw, ledger: EventLedger,
                 if ref_l[i]:
                     effect[i] = wa
             else:                    # o == 4: client-side fence marker
-                pend = unacked.get(c)
-                if pend:
-                    mp = max(pend)
-                    if mp > t:
-                        t = mp
-                    pend.clear()
+                conns = unacked.get(c)
+                if conns:
+                    for pend in conns.values():
+                        if pend:
+                            mp = max(pend)
+                            if mp > t:
+                                t = mp
+                            pend.clear()
             done_f[i] = 1
             if ref_l[i]:
                 chain[i] = t
@@ -712,12 +736,13 @@ def replay_vectorized(hw, ledger: EventLedger,
             if v > end:
                 end = v
         if ack_K > 0:
-            for pend in unacked.values():
-                if pend:
-                    mp = max(pend)
-                    if mp > end:
-                        end = mp
-                    pend.clear()
+            for conns in unacked.values():
+                for pend in conns.values():
+                    if pend:
+                        mp = max(pend)
+                        if mp > end:
+                            end = mp
+                        pend.clear()
         results.append(PhaseResult(
             name=name, duration=end - now, bytes_by_kind=dict(bk),
             rpc_count=rpc_count, clients=nclients, rpc_msgs=rpc_msgs))

@@ -28,12 +28,13 @@ application bytes read.
 from __future__ import annotations
 
 import time as _time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.basefs import BaseFS, EventKind
+from repro.core.basefs import TOPOLOGY, BaseFS, EventKind
 from repro.core.consistency import FileHandle, make_fs
 from repro.core.costmodel import CostModel, HardwareConstants, PhaseResult
+from repro.core.faults import FaultSchedule
 from repro.io.workloads import pattern_extent
 
 #: HACC particle record: 7 float32 + 1 int64 + 1 uint16 (38 bytes).
@@ -52,6 +53,17 @@ class SCRConfig:
     p: int = 12                  # processes per node
     particles: int = 10_000_000  # paper: 10M total
     failed_node: int = 0         # node that dies before restart
+
+    def __post_init__(self) -> None:
+        if self.n < 2:
+            raise ValueError(
+                f"SCR needs at least one write node plus the spare "
+                f"(n={self.n})")
+        if not 0 <= self.failed_node < self.write_nodes:
+            raise ValueError(
+                f"failed_node={self.failed_node} is not a write node "
+                f"(valid: 0..{self.write_nodes - 1}; node "
+                f"{self.write_nodes} is the spare)")
 
     @property
     def write_nodes(self) -> int:
@@ -109,9 +121,31 @@ def _ckpt_path(rank: int) -> str:
 def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
             verify: bool = True,
             timings: Optional[Dict[str, float]] = None,
-            tracer=None) -> SCRResult:
+            tracer=None,
+            faults: Optional[FaultSchedule] = None) -> SCRResult:
     t0 = _time.perf_counter()
-    fs = BaseFS()
+    # The node failure is an *injected fault*, not a hardcoded branch: the
+    # default schedule loses exactly cfg.failed_node, and a caller-supplied
+    # schedule replaces it wholesale (lost_nodes drives which ranks restart
+    # from the spare; buffer_loss_nodes makes survivors whose memory buffer
+    # was dropped fall back to the partner copy; drop/crash/slow fields are
+    # injected into the RPC plane like any other run).  A process-wide
+    # schedule (``set_topology(faults=...)``, e.g. ``benchmarks.run
+    # --faults``) is honored, gaining the fig-5 node loss if it names none.
+    if faults is None:
+        faults = TOPOLOGY.get("faults")
+    if faults is None:
+        faults = FaultSchedule(lost_nodes=(cfg.failed_node,))
+    elif not faults.lost_nodes:
+        faults = replace(faults, lost_nodes=(cfg.failed_node,))
+    lost_nodes = set(faults.lost_nodes)
+    buffer_loss = set(faults.buffer_loss_nodes) - lost_nodes
+    for v in sorted(lost_nodes | buffer_loss):
+        if not 0 <= v < cfg.write_nodes:
+            raise ValueError(
+                f"fault schedule names node {v}, which is not a write "
+                f"node (valid: 0..{cfg.write_nodes - 1})")
+    fs = BaseFS(faults=faults)
     layer = make_fs(cfg.model, fs)
     if tracer is not None:
         # Lift the run into the formal execution (repro.analysis.trace);
@@ -173,16 +207,20 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
         ckpt_bytes += 2 * cfg.bytes_per_rank
 
     # ==== restart phase =====================================================
-    # Node `failed_node` dies.  Its p ranks are re-spawned on the spare node
-    # (node id = write_nodes): they fetch the partner copy over MPI — that
-    # transfer is measured in its own phase ("spare_recover") and EXCLUDED
-    # from restart bandwidth, exactly like the paper's Fig 5 accounting.
+    # The schedule's lost nodes die.  Their ranks are re-spawned on the spare
+    # node (node id = write_nodes): they fetch the partner copy over MPI —
+    # that transfer is measured in its own phase ("spare_recover") and
+    # EXCLUDED from restart bandwidth, exactly like the paper's Fig 5
+    # accounting.  Surviving ranks on a burst-buffer-loss node lost their
+    # memory copy but not the node: they restart in place from the partner
+    # copy over the network instead of the local buffer.
     ledger.mark_phase("restart")
     restart_bytes = 0
     verified = 0
     for rank in range(ranks):
-        if node_of(rank) == cfg.failed_node:
+        if node_of(rank) in lost_nodes:
             continue
+        from_partner = node_of(rank) in buffer_loss
         fh = layer.open(rank, _ckpt_path(rank), node=node_of(rank))
         if cfg.model == "session":
             layer.session_open(fh)
@@ -190,13 +228,20 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
         for _name, esz in HACC_ARRAYS:
             nbytes = nper * esz
             layer.seek(fh, off)
-            data = layer.read(fh, nbytes)  # MEM_READ from own buffer
-            if verify:
-                # Symbolic descriptor compare on the extent plane.
-                assert data == pattern_extent(off, nbytes), (
-                    f"restart mismatch rank={rank} array={_name}"
-                )
-                verified += 1
+            if from_partner:
+                # Partner copy pulled memory-to-memory (same hand-modeled
+                # idiom as the checkpoint-side partner ship); counted in
+                # restart bandwidth via NET_TRANSFER.
+                ledger.record(EventKind.NET_TRANSFER, rank, nbytes,
+                              rpc_type="mem", peer=AUX + rank)
+            else:
+                data = layer.read(fh, nbytes)  # MEM_READ from own buffer
+                if verify:
+                    # Symbolic descriptor compare on the extent plane.
+                    assert data == pattern_extent(off, nbytes), (
+                        f"restart mismatch rank={rank} array={_name}"
+                    )
+                    verified += 1
             off += nbytes
             restart_bytes += nbytes
         if cfg.model == "session":
@@ -204,7 +249,7 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
 
     ledger.mark_phase("spare_recover")
     for rank in range(ranks):
-        if node_of(rank) != cfg.failed_node:
+        if node_of(rank) not in lost_nodes:
             continue
         # Spare-node rank pulls the partner copy (memory-to-memory over MPI).
         spare_cid = 2_000_000 + rank
@@ -222,6 +267,6 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
         timings["events"] = len(ledger.events)
     rpcs = {
         t: ledger.count(EventKind.RPC, t)
-        for t in ("attach", "query", "detach", "stat")
+        for t in ("attach", "query", "detach", "stat", "replay")
     }
     return SCRResult(cfg, phases, ckpt_bytes, restart_bytes, rpcs, verified)

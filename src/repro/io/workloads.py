@@ -284,7 +284,8 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  ack_window: Optional[int] = None,
                  timings: Optional[Dict[str, float]] = None,
                  tracer=None,
-                 engine: Optional[str] = None) -> WorkloadResult:
+                 engine: Optional[str] = None,
+                 faults=None) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
@@ -307,12 +308,18 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
     ``tracer`` (an :class:`repro.analysis.trace.ExecutionTracer`)
     optionally lifts the run into the paper's formal execution for race
     analysis; the run itself is unchanged (the proxy only observes).
+
+    ``faults`` (a :class:`repro.core.faults.FaultSchedule`) injects the
+    seeded fault plane — RPC drops with timeout/retry/backoff, shard-master
+    crash/failover, slow shards — into the fresh BaseFS; ``None`` keeps the
+    TOPOLOGY default (normally fault-free).  Ignored when ``fs`` is
+    supplied (the caller's BaseFS already fixed its fault plane).
     """
     t0 = _time.perf_counter()
     if fs is None:
         fs = BaseFS(num_shards=shards, batch=batch, linger=linger,
                     adaptive=adaptive, materialize=materialize,
-                    ack_window=ack_window)
+                    ack_window=ack_window, faults=faults)
     layer = make_fs(cfg.model, fs)
     if tracer is not None:
         layer = tracer.attach(layer)

@@ -69,6 +69,35 @@ def test_ana003_other_event_kinds_pass():
     assert lint_source(src, "src/repro/io/foo.py") == []
 
 
+# ----------------------------------------------------------------- ANA004
+def test_ana004_flags_hand_stamped_fault_metadata():
+    src = ("from repro.core.basefs import EventKind\n"
+           "def f(ledger):\n"
+           "    ledger.record(EventKind.MEM_WRITE, 0, 1, retries=3)\n"
+           "    ledger.record(EventKind.SSD_WRITE, 0, 1, failover=1)\n")
+    v = lint_source(src, "src/repro/io/foo.py")
+    assert [x.rule for x in v] == ["ANA004"] * 2
+    assert "retries" in v[0].message and "failover" in v[1].message
+    # The fault plane itself may stamp them.
+    assert lint_source(src, "src/repro/core/basefs.py") == []
+    assert lint_source(src, "src/repro/core/faults.py") == []
+
+
+def test_ana004_covers_direct_event_construction():
+    src = ("from repro.core.basefs import Event, EventKind\n"
+           "def f():\n"
+           "    return Event(EventKind.MEM_WRITE, 0, 1, failover=1)\n")
+    v = lint_source(src, "benchmarks/foo.py")
+    assert [x.rule for x in v] == ["ANA004"]
+
+
+def test_ana004_faultless_calls_pass():
+    src = ("from repro.core.basefs import EventKind\n"
+           "def f(ledger):\n"
+           "    ledger.record(EventKind.MEM_WRITE, 0, 1, peer=2)\n")
+    assert lint_source(src, "src/repro/io/foo.py") == []
+
+
 # ------------------------------------------------------------------- misc
 def test_violation_formatting():
     v = lint_source("bfs_query('/f')\n", "examples/demo.py")[0]

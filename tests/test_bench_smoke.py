@@ -20,6 +20,7 @@ import benchmarks.fig5_scr as fig5_scr
 import benchmarks.fig6_dl as fig6_dl
 import benchmarks.fig7_shard as fig7_shard
 import benchmarks.fig8_hot as fig8_hot
+import benchmarks.fig9_faults as fig9_faults
 from benchmarks import run as bench_run
 
 pytestmark = pytest.mark.slow
@@ -36,6 +37,7 @@ SHRINK = {
              (fig7_shard, "ACK_WINDOWS", (0, 1, 16)),
              (fig7_shard, "ACK_DED_M", 20)],
     "fig8": [(fig8_hot, "FAST_NODES", (2,))],
+    "fig9": [(fig9_faults, "FAST_NODES", 2), (fig9_faults, "PROCS", 4)],
 }
 
 

@@ -1,0 +1,377 @@
+"""Fault-injection plane (:mod:`repro.core.faults`, ``docs/FAULTS.md``).
+
+PR-9 tentpole coverage:
+
+* **clean-path bitwise identity** — ``faults=None`` (and a null
+  zero-rate schedule) replays event-for-event identical to a run with
+  no fault plane at all, across all four consistency models: same
+  event tuples, same per-event DES times, same phase durations, same
+  wire-message counts.  The PR-4 goldens in ``test_ack_window.py``
+  additionally pin this against pre-fault-plane captures.
+* **per-seed determinism** — the same seeded schedule reproduces the
+  identical stamped ledger and identical priced times; different seeds
+  draw different retry patterns.
+* **retry monotonicity** — the drop draws are coupled per (seed,
+  message, attempt), so raising the drop rate never *removes* a retry:
+  per-message retry counts are pointwise monotone, and priced phase
+  durations never get faster than the fault-free run.
+* **recovery semantics** — a shard-master crash replays in-flight
+  fire-and-forget attach batches at the next sync point (honest mode)
+  or loses them (``lossy=True``); the race checker passes the honest
+  recovered COMMIT trace and witnesses a race on the lossy one.
+* **SCR integration** — ``run_scr`` routes its node failure through a
+  ``FaultSchedule`` (invalid ``failed_node`` now rejected), and
+  burst-buffer loss makes surviving ranks restart from the partner
+  copy over the network.
+* **per-connection ack gates** (satellite) — ``ack_scope="global"``
+  reproduces the old single-heap pricing bitwise on one shard, and the
+  per-connection default is never slower on many shards.
+"""
+
+import hashlib
+
+import pytest
+
+from repro.core.basefs import BaseFS, EventKind
+from repro.core.consistency import make_fs
+from repro.core.costmodel import CostModel
+from repro.core.faults import FaultSchedule, _u01
+from repro.core.vecreplay import UnsupportedLedger, lower
+from repro.io.scr import SCRConfig, run_scr
+from repro.io.workloads import cc_r, pattern_extent, run_workload
+
+KB = 1024
+
+MODELS = ("posix", "commit", "session", "mpiio")
+
+
+def _event_tuples(ledger):
+    return [
+        (e.kind.value, e.client, e.nbytes, e.rpc_type, e.peer, e.seq,
+         e.rpc_ranges, e.shard, e.rpc_calls, e.flush, e.linger, e.deps,
+         e.opened_after, e.last_after, e.forced_after, e.members,
+         e.retries, e.failover)
+        for e in ledger.events
+    ]
+
+
+def _digest(ledger):
+    return hashlib.sha256(repr(_event_tuples(ledger)).encode()).hexdigest()
+
+
+def _capture(model, faults, ack_window=0):
+    fs = BaseFS(num_shards=2, batch=8, linger=0.0, ack_window=ack_window,
+                faults=faults)
+    res = run_workload(cc_r(2, 8 * KB, model, p=3, m=4), fs=fs)
+    tr = []
+    phases = CostModel().replay(fs.ledger, trace=tr, engine="scalar")
+    return {
+        "tuples": _event_tuples(fs.ledger),
+        "trace": [(e.seq, s, f) for e, s, f in tr],
+        "durations": [(p.name, p.duration) for p in phases],
+        "rpc_msgs": sum(p.rpc_msgs for p in phases),
+        "retries": sum(p.rpc_retries for p in phases),
+        "bw": (res.write_bandwidth, res.read_bandwidth),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Clean-path bitwise identity.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model", MODELS)
+def test_faults_none_is_bitwise_identical(model):
+    base = _capture(model, faults=None)
+    null = _capture(model, faults=FaultSchedule())
+    assert null["tuples"] == base["tuples"]
+    assert null["trace"] == base["trace"]
+    assert null["durations"] == base["durations"]
+    assert null["rpc_msgs"] == base["rpc_msgs"]
+    assert base["retries"] == 0 and null["retries"] == 0
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_faults_none_bitwise_identical_under_ack_window(model):
+    base = _capture(model, faults=None, ack_window=4)
+    null = _capture(model, faults=FaultSchedule(), ack_window=4)
+    assert null["tuples"] == base["tuples"]
+    assert null["trace"] == base["trace"]
+    assert null["durations"] == base["durations"]
+
+
+# ---------------------------------------------------------------------------
+# Seeded determinism + retry monotonicity.
+# ---------------------------------------------------------------------------
+def test_same_seed_same_ledger_digest_and_times():
+    a = _capture("commit", FaultSchedule(seed=7, drop_rate=0.3))
+    b = _capture("commit", FaultSchedule(seed=7, drop_rate=0.3))
+    assert a == b
+    c = _capture("commit", FaultSchedule(seed=8, drop_rate=0.3))
+    assert a["tuples"] != c["tuples"]  # a different seed draws anew
+
+
+def test_retry_counts_pointwise_monotone_in_drop_rate():
+    # Coupled draws: message m's k-th attempt uses u = _u01(seed, m, k)
+    # regardless of the rate, so every retry taken at rate r1 is also
+    # taken at r2 >= r1.
+    for seed in range(20):
+        lo = FaultSchedule(seed=seed, drop_rate=0.1).start()
+        hi = FaultSchedule(seed=seed, drop_rate=0.35).start()
+        for m in range(200):
+            r_lo, _ = lo.on_rpc("attach", m % 4)
+            r_hi, _ = hi.on_rpc("attach", m % 4)
+            assert r_lo <= r_hi, (seed, m)
+
+
+def test_u01_is_deterministic_and_uniformish():
+    xs = [_u01(3, m, 0) for m in range(4000)]
+    assert xs == [_u01(3, m, 0) for m in range(4000)]
+    assert all(0.0 <= x < 1.0 for x in xs)
+    frac = sum(x < 0.25 for x in xs) / len(xs)
+    assert 0.2 < frac < 0.3  # crude uniformity — it is a hash, not an RNG
+
+
+def test_faults_never_speed_a_run_up():
+    base = _capture("commit", faults=None)
+    seen_retry = False
+    for rate in (0.05, 0.2, 0.4):
+        faulty = _capture("commit", FaultSchedule(seed=1, drop_rate=rate))
+        seen_retry = seen_retry or faulty["retries"] > 0
+        for (n0, d0), (n1, d1) in zip(base["durations"],
+                                      faulty["durations"]):
+            assert n0 == n1 and d1 >= d0, (rate, n0)
+    assert seen_retry  # the highest rate must actually draw drops
+
+
+def test_retry_delay_prices_timeout_plus_backoff():
+    s = FaultSchedule(rpc_timeout=200e-6, backoff_base=50e-6)
+    assert s.retry_delay(0) == 0.0
+    assert s.retry_delay(1) == pytest.approx(250e-6)
+    assert s.retry_delay(3) == pytest.approx(3 * 200e-6 + (50 + 100 + 200) * 1e-6)
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        FaultSchedule(drop_rate=1.0)
+    with pytest.raises(ValueError):
+        FaultSchedule(drop_rate=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# Crash / failover recovery.
+# ---------------------------------------------------------------------------
+def _streaming_crash(lossy, crash_at=5, n_ops=40):
+    """Posix client streams strided writes through fire-and-forget
+    flushes; shard 0's master crashes mid-stream."""
+    sched = FaultSchedule(crash_shards={0: crash_at}, lossy=lossy)
+    fs = BaseFS(num_shards=1, batch=4, linger=0.0, ack_window=8,
+                faults=sched)
+    pfs = make_fs("posix", fs)
+    fh = pfs.open(0, "/crash/stream", node=0, tier="mem")
+    fs.ledger.mark_phase("write")
+    for j in range(n_ops):
+        pfs.seek(fh, j * 8 * KB)
+        pfs.write(fh, pattern_extent(j * 8 * KB, 8 * KB))
+    fs.drain()
+    return fs
+
+
+def test_honest_failover_replays_in_flight_batches():
+    fs = _streaming_crash(lossy=False)
+    replays = [e for e in fs.ledger.events
+               if e.kind is EventKind.RPC and e.rpc_type == "replay"]
+    assert replays and all(e.failover == 1 for e in replays)
+    assert fs.faults.lost == []
+    phases = CostModel().replay(fs.ledger)
+    assert sum(p.failovers for p in phases) == 1  # one recovery window
+
+
+def test_lossy_failover_loses_instead_of_replaying():
+    fs = _streaming_crash(lossy=True)
+    assert fs.ledger.count(EventKind.RPC, "replay") == 0
+    assert fs.faults.lost_count(0) > 0
+
+
+def test_crash_failover_is_priced_once():
+    sched = FaultSchedule(crash_shards={0: 2}, recovery_window=2e-3)
+    fs = BaseFS(num_shards=2, batch=8, linger=0.0, faults=sched)
+    run_workload(cc_r(2, 8 * KB, "commit", p=3, m=4), fs=fs)
+    phases = CostModel().replay(fs.ledger)
+    assert sum(p.failovers for p in phases) == 1
+    base_fs = BaseFS(num_shards=2, batch=8, linger=0.0)
+    run_workload(cc_r(2, 8 * KB, "commit", p=3, m=4), fs=base_fs)
+    base = CostModel().replay(base_fs.ledger)
+    # The window overlaps work on the surviving shard, so the wall
+    # clock grows by at most (and typically less than) the window.
+    total = sum(p.duration for p in phases)
+    base_total = sum(p.duration for p in base)
+    assert base_total < total <= base_total + sched.recovery_window + 1e-3
+
+
+def test_slow_shard_accrues_degraded_time():
+    sched = FaultSchedule(slow_shards={0: 4.0})
+    fs = BaseFS(num_shards=2, batch=8, linger=0.0, faults=sched)
+    run_workload(cc_r(2, 8 * KB, "commit", p=3, m=4), fs=fs)
+    phases = CostModel().replay(fs.ledger)
+    assert sum(p.degraded_time for p in phases) > 0
+
+
+# ---------------------------------------------------------------------------
+# Race checker verdicts on recovered traces.
+# ---------------------------------------------------------------------------
+def _traced_commit_run(lossy):
+    from repro.analysis.racecheck import check_execution
+    from repro.analysis.trace import ExecutionTracer
+    from repro.core.model import MODELS as SPEC_MODELS
+
+    sched = FaultSchedule(crash_shards={0: 1}, lossy=lossy)
+    fs = BaseFS(num_shards=1, batch=2, linger=0.0, ack_window=4,
+                faults=sched)
+    layer = make_fs("commit", fs)
+    tracer = ExecutionTracer()
+    layer = tracer.attach(layer)
+    fs.ledger.mark_phase("write")
+    w = layer.open(0, "/fault/race", node=0)
+    offs = (0, 8 * KB, 16 * KB, 24 * KB)
+    for off in offs:
+        layer.seek(w, off)
+        layer.write(w, pattern_extent(off, 4 * KB))
+    layer.commit(w)
+    fs.ledger.mark_phase("read")
+    r = layer.open(1, "/fault/race", node=1)
+    for off in offs:
+        layer.seek(r, off)
+        layer.read(r, 4 * KB)
+    fs.drain()
+    return fs, check_execution(tracer.exe, SPEC_MODELS["commit"])
+
+
+def test_honest_recovery_keeps_commit_trace_properly_synchronized():
+    fs, rep = _traced_commit_run(lossy=False)
+    assert fs.ledger.count(EventKind.RPC, "replay") > 0
+    assert rep.race_free, rep.summary()
+
+
+def test_lossy_recovery_under_commit_is_a_witnessed_race():
+    fs, rep = _traced_commit_run(lossy=True)
+    assert fs.faults.lost_count(0) > 0
+    assert not rep.race_free
+    assert any("commit" in r.witness for r in rep.races)
+
+
+def test_session_recovery_stays_race_free():
+    from repro.analysis.racecheck import check_execution
+    from repro.analysis.trace import ExecutionTracer
+    from repro.core.model import MODELS as SPEC_MODELS
+    from repro.io.workloads import rn_r
+
+    tracer = ExecutionTracer()
+    run_workload(rn_r(2, 4 * KB, "session", p=2, m=3), tracer=tracer,
+                 faults=FaultSchedule(seed=3, drop_rate=0.2,
+                                      crash_shards={0: 4}),
+                 batch=4, ack_window=4)
+    rep = check_execution(tracer.exe, SPEC_MODELS["session"])
+    assert rep.race_free, rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# Vector engine: fault ledgers are scalar-only.
+# ---------------------------------------------------------------------------
+def test_vector_engine_rejects_fault_ledgers_and_falls_back():
+    sched = FaultSchedule(seed=2, drop_rate=0.2)
+    fs = BaseFS(num_shards=2, batch=8, linger=0.0, faults=sched)
+    run_workload(cc_r(2, 8 * KB, "commit", p=3, m=4), fs=fs)
+    with pytest.raises(UnsupportedLedger):
+        lower(fs.ledger)
+    scalar = CostModel().replay(fs.ledger, engine="scalar")
+    vector = CostModel().replay(fs.ledger, engine="vector")  # falls back
+    assert [(p.name, p.duration) for p in scalar] \
+        == [(p.name, p.duration) for p in vector]
+    with pytest.raises(ValueError):
+        CostModel().replay(fs.ledger, engine="vector", faults=sched)
+
+
+# ---------------------------------------------------------------------------
+# SCR: injected node failure + burst-buffer loss.
+# ---------------------------------------------------------------------------
+def test_scr_rejects_invalid_failed_node():
+    with pytest.raises(ValueError):
+        SCRConfig(n=3, model="commit", failed_node=2)  # node 2 is the spare
+    with pytest.raises(ValueError):
+        SCRConfig(n=3, model="commit", failed_node=7)
+    with pytest.raises(ValueError):
+        SCRConfig(n=3, model="commit", failed_node=-1)
+    with pytest.raises(ValueError):
+        SCRConfig(n=1, model="commit")  # no room for a spare
+
+
+def test_scr_schedule_drives_restart_membership():
+    cfg = SCRConfig(n=3, model="commit", p=2, particles=4000,
+                    failed_node=1)
+    res = run_scr(cfg)  # default schedule loses exactly failed_node
+    # Survivors: ranks of node 0 only (node 1 lost, node 2 is the spare).
+    assert res.verified_reads == cfg.p * 9
+    with pytest.raises(ValueError):
+        run_scr(cfg, faults=FaultSchedule(lost_nodes=(5,)))
+
+
+def test_scr_buffer_loss_reads_partner_copy():
+    cfg = SCRConfig(n=4, model="commit", p=2, particles=6000)
+    clean = run_scr(cfg)
+    lossy = run_scr(cfg, faults=FaultSchedule(
+        lost_nodes=(cfg.failed_node,), buffer_loss_nodes=(1,)))
+    # Node 1's surviving ranks restarted from the partner copy: their 9
+    # arrays moved over the network instead of the local memory tier.
+    assert lossy.verified_reads == clean.verified_reads - cfg.p * 9
+    ph_clean = clean.phase("restart")
+    ph_lossy = lossy.phase("restart")
+    net = EventKind.NET_TRANSFER
+    assert ph_clean.bytes_by_kind.get(net, 0) == 0
+    assert ph_lossy.bytes_by_kind.get(net, 0) == cfg.p * cfg.bytes_per_rank
+    assert lossy.restart_bytes == clean.restart_bytes
+    assert lossy.restart_bandwidth > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-connection ack-window credit gates.
+# ---------------------------------------------------------------------------
+def _ack_capture(model, shards, ack_scope):
+    fs = BaseFS(num_shards=shards, batch=4, linger=0.0, ack_window=2)
+    run_workload(cc_r(2, 8 * KB, model, p=3, m=4), fs=fs)
+    tr = []
+    phases = CostModel().replay(fs.ledger, trace=tr, engine="scalar",
+                                ack_scope=ack_scope)
+    return ([(e.seq, s, f) for e, s, f in tr],
+            [(p.name, p.duration) for p in phases])
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_single_shard_connection_scope_is_bitwise_global(model):
+    # One shard => one connection: the per-connection gates and the old
+    # single global heap are the same machine, bitwise.
+    conn = _ack_capture(model, shards=1, ack_scope="connection")
+    glob = _ack_capture(model, shards=1, ack_scope="global")
+    assert conn == glob
+
+
+def test_multi_shard_connection_scope_never_slower():
+    # Independent per-connection windows can only relax the old global
+    # gate: a flush to shard A no longer waits on shard B's slow ack.
+    for model in MODELS:
+        _, conn = _ack_capture(model, shards=4, ack_scope="connection")
+        _, glob = _ack_capture(model, shards=4, ack_scope="global")
+        for (n0, dc), (n1, dg) in zip(conn, glob):
+            assert n0 == n1 and dc <= dg + 1e-15, (model, n0)
+
+
+def test_ack_scope_validation_and_vector_support():
+    fs = BaseFS(num_shards=2, batch=4, linger=0.0, ack_window=2)
+    run_workload(cc_r(2, 8 * KB, "posix", p=3, m=4), fs=fs)
+    with pytest.raises(ValueError):
+        CostModel().replay(fs.ledger, ack_scope="bogus")
+    with pytest.raises(ValueError):
+        CostModel().replay(fs.ledger, engine="vector", ack_scope="global")
+    # The vector engine implements the per-connection default bitwise.
+    scalar = CostModel().replay(fs.ledger, engine="scalar")
+    vector = CostModel().replay(fs.ledger, engine="vector")
+    assert [(p.name, p.duration) for p in scalar] \
+        == [(p.name, p.duration) for p in vector]
