@@ -84,13 +84,14 @@ analyze:
 	$(PYTHON) -m repro.analysis --fig all --full --fuzz 200 --minimize \
 		--lint --out ANALYSIS.txt
 
-# Wall-clock / peak-RSS harness (BENCH_pr9.json): fast grid, both data
-# planes (extent vs byte-moving materialize), scalar vs vector replay
-# per figure, the 65536-client fig7_big vectorized-replay scale point,
-# plus the fig9 fault-plane point (scalar-only: fault ledgers are
-# UnsupportedLedger for the vector engine).  BENCH_pr4.json /
-# BENCH_pr5.json / BENCH_pr8.json are the frozen earlier captures (the
-# PR-5 hot-path before/after lives under hotpath_pr5).
+# Wall-clock / peak-RSS harness (BENCH_pr10.json): fast grid, both data
+# planes (extent vs byte-moving materialize), bulk vs scalar execution
+# and scalar vs vector replay per figure, the 65536-client fig7_big and
+# 262144-client fig7_huge scale points, plus the fig9 fault-plane point
+# (scalar-only: fault ledgers are UnsupportedLedger for the vector
+# engine).  BENCH_pr4.json / BENCH_pr5.json / BENCH_pr8.json /
+# BENCH_pr9.json are the frozen earlier captures (the PR-5 hot-path
+# before/after lives under hotpath_pr5).
 perf:
 	$(PYTHON) -m benchmarks.perf --grid fast
 

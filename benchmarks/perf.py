@@ -33,6 +33,17 @@ fault stamping at execution time plus retry/failover pricing at replay
 time.  Fault ledgers are scalar-only (``UnsupportedLedger`` fallback),
 so the point reports no vector columns.
 
+PR 10 refactors the execution plane around bulk op programs
+(``docs/ARCHITECTURE.md``): ``exec_s`` now measures the bulk path (the
+``run_workload`` default), workload points additionally report
+``exec_scalar_s`` (a second run on the reference op-by-op loop;
+bitwise-identical ledger) and ``exec_bulk_speedup``, every point
+carries ``replay_engine`` (+ ``replay_fallback_reason`` when the
+vector engine declined the ledger — the fallback is surfaced, never
+silent), and the ``fig7_huge`` point prices RN-R at 262,144 clients —
+the first point at that scale that completes at all.  On points with
+an ``exec_scalar_s`` column, ``peak_rss_mb`` covers both runs.
+
     PYTHONPATH=src python -m benchmarks.perf [--grid fast|full]
         [--figs fig3,...] [--modes extent,materialize] [--out PATH]
 
@@ -63,7 +74,7 @@ from repro.io.scr import SCRConfig, run_scr
 from repro.io.workloads import cc_r, cn_w, rn_r, rn_r_hot, run_workload, set_topology
 
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
-OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr9.json"))
+OUT_DEFAULT = os.path.abspath(os.path.join(_REPO_ROOT, "BENCH_pr10.json"))
 MODES = ("extent", "materialize")
 
 
@@ -84,16 +95,29 @@ def _time_vector_replay(ledger, timings: Dict) -> None:
     timings["replay_vector_warm_s"] = t2 - t1
 
 
-def _workload_point(cfg, **overrides) -> Callable[[], Dict]:
+def _workload_point(cfg, scalar_exec: bool = True,
+                    **overrides) -> Callable[[], Dict]:
     def measure() -> Dict:
         timings: Dict = {}
         fs = BaseFS(num_shards=overrides.get("shards"),
                     adaptive=overrides.get("adaptive"),
                     faults=overrides.get("faults"))
-        run_workload(cfg, fs=fs, timings=timings)
+        run_workload(cfg, fs=fs, timings=timings, bulk=True)
         if fs.faults is None:
             # Fault-stamped ledgers are scalar-only (UnsupportedLedger).
             _time_vector_replay(fs.ledger, timings)
+        if scalar_exec:
+            # Reference op-by-op execution of the same point (bitwise-
+            # identical ledger): the scalar-vs-bulk exec comparison.
+            # Skipped at the fig7_big/fig7_huge scales so their
+            # peak_rss_mb keeps measuring the columnar representation
+            # alone (their scalar baseline lives in BENCH_pr8.json).
+            sc: Dict = {}
+            fs2 = BaseFS(num_shards=overrides.get("shards"),
+                         adaptive=overrides.get("adaptive"),
+                         faults=overrides.get("faults"))
+            run_workload(cfg, fs=fs2, timings=sc, bulk=False)
+            timings["exec_scalar_s"] = sc["exec_s"]
         return timings
 
     return measure
@@ -120,7 +144,7 @@ def _dlio_point(hosts: int, per_host: int) -> Callable[[], Dict]:
         t1 = time.perf_counter()
         CostModel().replay(store.fs.ledger)
         t2 = time.perf_counter()
-        events = len(store.fs.ledger.events)
+        events = store.fs.ledger.n_events
         timings = {"exec_s": t1 - t0, "replay_s": t2 - t1, "events": events}
         _time_vector_replay(store.fs.ledger, timings)
         return timings
@@ -145,6 +169,9 @@ def _points(grid: str) -> Dict[str, Dict]:
     # a point the per-event scalar loop priced in tens of seconds.
     huge_nodes = 4096 if fast else 8192
     cfg7big = rn_r(huge_nodes, 8 * KB, "commit", p=16, m=10)
+    # The bulk-execution scale payoff: 262144 clients — a first point
+    # that completes at all (scalar execution alone would take minutes).
+    cfg7huge = rn_r(16384, 8 * KB, "commit", p=16, m=10)
     cfg8 = rn_r_hot(hot_nodes, 8 * KB, "commit", p=16, m=10)
     return {
         "fig3": {
@@ -170,8 +197,16 @@ def _points(grid: str) -> Dict[str, Dict]:
         "fig7_big": {
             "point": f"RN-R commit 8KB, 8 shards, {16 * huge_nodes} clients "
                      "(vectorized-replay scale point)",
-            "measure": _workload_point(cfg7big, shards=8),
+            "measure": _workload_point(cfg7big, shards=8,
+                                       scalar_exec=False),
             "modes": ("extent",),  # byte plane is pointless at this scale
+        },
+        "fig7_huge": {
+            "point": "RN-R commit 8KB, 8 shards, 262144 clients "
+                     "(bulk-execution scale point)",
+            "measure": _workload_point(cfg7huge, shards=8,
+                                       scalar_exec=False),
+            "modes": ("extent",),
         },
         "fig8": {
             "point": f"RN-R-hot commit 8KB, 8 shards adaptive, {16 * hot_nodes} clients",
@@ -194,7 +229,7 @@ def _run_one(fig: str, mode: str, grid: str) -> Dict:
     result["peak_rss_mb"] = round(peak_kb / 1024.0, 1)
     result["exec_s"] = round(result["exec_s"], 3)
     result["replay_s"] = round(result["replay_s"], 3)
-    for k in ("replay_vector_s", "replay_vector_warm_s"):
+    for k in ("replay_vector_s", "replay_vector_warm_s", "exec_scalar_s"):
         if k in result:
             result[k] = round(result[k], 3)
     return result
@@ -258,8 +293,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                 continue
             vec = entry[mode].get("replay_vector_s")
             vec_col = f"  vec {vec:7.3f}s" if vec is not None else ""
+            sc = entry[mode].get("exec_scalar_s")
+            sc_col = f"  scalar-exec {sc:8.3f}s" if sc is not None else ""
             print(
-                f"  {fig} [{mode:11s}] exec {entry[mode]['exec_s']:8.3f}s  "
+                f"  {fig} [{mode:11s}] exec {entry[mode]['exec_s']:8.3f}s"
+                f"{sc_col}  "
                 f"replay {entry[mode]['replay_s']:7.3f}s{vec_col}  "
                 f"rss {entry[mode]['peak_rss_mb']:8.1f}MB  "
                 f"({points[fig]['point']}; child {dt:.1f}s)"
@@ -275,26 +313,39 @@ def main(argv: Optional[List[str]] = None) -> int:
         if ext.get("replay_s") and ext.get("replay_vector_warm_s"):
             entry["replay_speedup_warm"] = round(
                 ext["replay_s"] / ext["replay_vector_warm_s"], 2)
+        if ext.get("exec_s") and ext.get("exec_scalar_s"):
+            entry["exec_bulk_speedup"] = round(
+                ext["exec_scalar_s"] / ext["exec_s"], 2)
         grid_results[fig] = entry
 
     doc: Dict = {}
     if os.path.exists(args.out):
         with open(args.out) as f:
             doc = json.load(f)
-    doc.setdefault("pr", 9)
+    doc.setdefault("pr", 10)
     doc.setdefault(
         "note",
         "Wall-clock + peak-RSS per figure, extent (zero-copy) vs "
-        "materialize (byte-moving) data plane.  replay_s is the scalar "
+        "materialize (byte-moving) data plane.  exec_s is BULK "
+        "execution (compiled op programs through the layer run_ops "
+        "API; docs/ARCHITECTURE.md), exec_scalar_s the reference "
+        "op-by-op loop on the same point (bitwise-identical ledger; "
+        "peak_rss_mb covers both runs where present), "
+        "exec_bulk_speedup their ratio.  replay_s is the scalar "
         "reference DES, replay_vector_s the struct-of-arrays engine "
         "(bitwise-identical results; docs/REPLAY.md) including its "
         "one-time lowering, replay_vector_warm_s with the lowering "
         "cached (the re-pricing path), replay_speedup(_warm) the "
-        "scalar/vector ratios on the extent plane; fig7_big is the "
-        "65536-client vectorized-replay scale point; fig9 is the "
-        "fault-plane point (docs/FAULTS.md; fault ledgers price on the "
-        "scalar engine only, so it has no vector columns).  See "
-        "benchmarks/perf.py.",
+        "scalar/vector ratios on the extent plane.  replay_engine "
+        "says which engine actually priced replay_s, with "
+        "replay_fallback_reason present when a requested vector "
+        "replay fell back to scalar.  fig7_big is the 65536-client "
+        "vectorized-replay scale point, fig7_huge the 262144-client "
+        "bulk-execution scale point (both extent-only, no in-child "
+        "scalar-exec rerun so RSS measures the columnar ledger "
+        "alone); fig9 is the fault-plane point (docs/FAULTS.md; "
+        "fault ledgers price on the scalar engine only, so it has no "
+        "vector columns).  See benchmarks/perf.py.",
     )
     # Merge per figure: a partial --figs/--modes run refreshes only the
     # figures it measured, never discarding the rest of the record.

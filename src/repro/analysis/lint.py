@@ -32,6 +32,16 @@ primitives and hand-build ledgers):
   anywhere else would be retries the schedule never drew — priced
   delay without an injected fault, breaking per-seed determinism and
   the ``faults=None`` bitwise-identity guarantee.
+* **ANA005 — bulk submission enters through the layer API only.**
+  The columnar execution kernels — ``bulk_write_run`` /
+  ``bulk_read_run`` on ``BaseFS`` and the batcher's ``submit_run`` —
+  append ledger rows directly and may only be called from
+  ``core/consistency.py`` (``run_ops``, the layer bulk API) and
+  ``core/basefs.py`` itself.  Any other caller would bypass the
+  layer's sync-point placement and its ``sync_op_kinds`` hooks —
+  exactly the per-model difference under study — so workloads and
+  benchmarks must submit op programs via ``run_ops``, never drive a
+  kernel themselves (``docs/ARCHITECTURE.md``, execution plane).
 
 ``run_lint()`` returns violations; the CLI (``python -m repro.analysis
 --lint``) and the blocking ``make analyze-smoke`` CI step exit nonzero
@@ -56,6 +66,11 @@ _ANA001_ALLOWED = ("src/repro/core/consistency.py",
 _ANA003_ALLOWED = ("src/repro/core/basefs.py",)
 #: Files where ANA004 may stamp fault metadata on events.
 _ANA004_ALLOWED = ("src/repro/core/basefs.py", "src/repro/core/faults.py")
+#: Bulk execution kernels guarded by ANA005 …
+_BULK_KERNELS = frozenset({"bulk_write_run", "bulk_read_run", "submit_run"})
+#: … and the files allowed to call them (the layer API + BaseFS).
+_ANA005_ALLOWED = ("src/repro/core/consistency.py",
+                   "src/repro/core/basefs.py")
 #: Keywords ANA004 guards on record()/Event() calls.
 _FAULT_KEYWORDS = frozenset({"retries", "failover"})
 #: Class-body assignments ANA002 requires of every layer.
@@ -108,6 +123,13 @@ def _lint_calls(tree: ast.AST, rel: str, out: List[Violation]) -> None:
                 "ANA003", rel, node.lineno,
                 "hand-recorded EventKind.RPC event — RPCs must go "
                 "through the batcher/server so the DES prices them"))
+        if name in _BULK_KERNELS and rel not in _ANA005_ALLOWED:
+            out.append(Violation(
+                "ANA005", rel, node.lineno,
+                f"direct {name}() call bypasses the layer bulk API — "
+                "op programs must be submitted through run_ops() so "
+                "sync_op_kinds hooks and sync-point placement stay "
+                "with the consistency layer"))
         if (name in ("record", "Event") and rel not in _ANA004_ALLOWED):
             stamped = sorted(
                 kw.arg for kw in node.keywords

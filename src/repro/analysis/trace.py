@@ -33,6 +33,7 @@ from __future__ import annotations
 from bisect import bisect_right
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.core import ops as opstream
 from repro.core.model import Execution, Op
 
 #: Barrier hubs get dedicated negative pids, outside any real client id.
@@ -69,7 +70,7 @@ class ExecutionTracer:
 
     # ------------------------------------------------------------ recording
     def _log(self, pid: int, op: Op) -> None:
-        self._op_pos.setdefault(pid, []).append(len(self._ledger.events))
+        self._op_pos.setdefault(pid, []).append(self._ledger.n_events)
         self._op_log.setdefault(pid, []).append(op)
 
     def touch(self, pid: int) -> None:
@@ -251,3 +252,47 @@ class TracingLayer:
         self._sync_unless_lost(fh, before,
                                self.sync_op_kinds["file_sync"])
         return rc
+
+    # ---- bulk submission -------------------------------------------------
+    def run_ops(self, program, handles, payload_fn=None, expect_fn=None):
+        """Interpret a compiled op program op-by-op THROUGH the proxy.
+
+        Tracing needs to observe every operation individually (and the
+        dep scan reads the object event view), so a traced run takes
+        the scalar reference path — same calls, same ledger, every
+        formal op recorded — never the bulk kernels.  This is one of
+        the "object path required" cases in ``docs/REPLAY.md``.
+        """
+        verified = 0
+        ops_col, cl_col = program.op, program.client
+        off_col, sz_col = program.offset, program.size
+        for i in range(len(ops_col)):
+            o = ops_col[i]
+            fh = handles[cl_col[i]]
+            if o == opstream.OP_WRITE:
+                if payload_fn is None:
+                    raise ValueError("op program contains writes but no "
+                                     "payload_fn was given")
+                off = off_col[i]
+                self.seek(fh, off)
+                self.write(fh, payload_fn(off, sz_col[i]))
+            elif o == opstream.OP_READ:
+                off = off_col[i]
+                self.seek(fh, off)
+                data = self.read(fh, sz_col[i])
+                if expect_fn is not None:
+                    if data != expect_fn(off, sz_col[i]):
+                        raise AssertionError(
+                            f"read mismatch at offset {off}")
+                    verified += 1
+            elif o == opstream.OP_COMMIT:
+                self.commit(fh)
+            elif o == opstream.OP_SESSION_OPEN:
+                self.session_open(fh)
+            elif o == opstream.OP_SESSION_CLOSE:
+                self.session_close(fh)
+            elif o == opstream.OP_FILE_SYNC:
+                self.file_sync(fh)
+            else:
+                raise ValueError(f"unknown opcode {o}")
+        return verified

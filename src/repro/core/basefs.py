@@ -31,15 +31,23 @@ an event-for-event identical ledger by construction.
 from __future__ import annotations
 
 import itertools
+from bisect import bisect_right
+from collections import Counter as _Counter
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
+from zlib import crc32
 
 from repro.core.extents import (ExtentFile, ExtentLog, Payload,  # noqa: F401
                                 ZeroExtent, as_payload, concat)
 from repro.core.intervals import BufferIntervalMap, Interval, OwnerIntervalMap
 from repro.core.routing import DEFAULT_STRIPE, StaticRouter, make_router
 from repro.core.routing import shard_of  # noqa: F401  (re-export, see below)
+
+try:  # columnar read-run accelerator; the scalar kernel needs no numpy
+    import numpy as _np
+except Exception:  # pragma: no cover - numpy ships with the toolchain image
+    _np = None
 
 
 class BFSError(Exception):
@@ -111,6 +119,49 @@ class Event:
     failover: int = 0
 
 
+# Row layout of the ledger's columnar append representation: one tuple
+# per event holding every Event field EXCEPT ``seq`` (derived: row i has
+# seq ``_seq0 + i``), in Event field order.  Kept as flat row tuples —
+# ~3x smaller than Event objects and transposable to columns in one
+# ``zip(*rows)`` — so 100M-event ledgers never pay per-object overhead
+# on the append path and ``vecreplay.lower()`` reads them natively.
+#
+# The ``kind`` cell stores ``EventKind.value`` (an interned str), NOT
+# the enum member: every row field is then a GC-atomic immutable, the
+# collector untracks the tuples on its first pass, and a million-row
+# ledger adds nothing to later full-collection sweeps (enum members are
+# ordinary tracked objects and would pin every row in the scan set —
+# measured at ~45% of bulk execution time at the fig7_big scale).
+_ROW_FIELDS = ("kind", "client", "nbytes", "rpc_type", "peer",
+               "rpc_ranges", "shard", "rpc_calls", "flush", "linger",
+               "deps", "opened_after", "last_after", "forced_after",
+               "members", "retries", "failover")
+
+# kind-cell encodings for the row builders, and the decode map back to
+# the enum for Event materialization.
+_SSD_W_V = EventKind.SSD_WRITE.value
+_SSD_R_V = EventKind.SSD_READ.value
+_NET_V = EventKind.NET_TRANSFER.value
+_PFS_R_V = EventKind.PFS_READ.value
+_RPC_V = EventKind.RPC.value
+_MEM_W_V = EventKind.MEM_WRITE.value
+_MEM_R_V = EventKind.MEM_READ.value
+_KIND_OF = {k.value: k for k in EventKind}
+
+
+# Shared default tail of a data-event row — every Event field after
+# (kind, client, nbytes) at its default.  The bulk kernels append
+# ``(kind, client, nbytes) + _DATA_TAIL`` for SSD/MEM/NET/PFS rows.
+_DATA_TAIL = ("", -1, 1, 0, 1, "", 0.0, (), -1, -1, -1, (), 0, 0)
+
+
+def _row_to_event(row: tuple, seq: int) -> Event:
+    r = row
+    return Event(_KIND_OF[r[0]], r[1], r[2], r[3], r[4], seq, r[5], r[6],
+                 r[7], r[8], r[9], r[10], r[11], r[12], r[13], r[14],
+                 r[15], r[16])
+
+
 class EventLedger:
     """Append-only record of every I/O and RPC event in issue order.
 
@@ -121,11 +172,28 @@ class EventLedger:
     hooks let the batcher close open queues at phase boundaries;
     ``pre_record`` hooks let a zero-linger queue flush before any
     intervening event by the same client is appended.
+
+    Storage is columnar (``_rows``: one 17-tuple per event, seq
+    derived); ``.events`` is a LAZY materialization of the object view
+    for diagnostics, the tracer, and the race checker.  Mutating the
+    materialized list (tests do, to build unsupported ledgers) flips the
+    ledger into legacy object-authoritative mode: the row store is
+    abandoned and every consumer — including ``vecreplay.lower()`` —
+    falls back to the object path.  Contract in ``docs/REPLAY.md``.
     """
 
     def __init__(self) -> None:
-        self.events: List[Event] = []
-        self._seq = itertools.count()
+        self._rows: List[tuple] = []
+        self._seq0 = 0               # seq of _rows[0]
+        self._next_seq = 0           # seq the next appended row will get
+        # Lazy object view: _evcache materializes _rows[:_mat_rows];
+        # _cache_len remembers its length at the last sync so external
+        # mutation (len change) is detectable; _legacy marks the object
+        # list as authoritative after such a mutation.
+        self._evcache: Optional[List[Event]] = None
+        self._mat_rows = 0
+        self._cache_len = 0
+        self._legacy = False
         self.client_node: Dict[int, int] = {}  # client id -> node id
         self.on_barrier: List[Callable[[], None]] = []
         self.pre_record: List[Callable[[EventKind, int], None]] = []
@@ -148,6 +216,74 @@ class EventLedger:
         # model and changes nothing.
         self.faults = None
 
+    # ---- object view (lazy materialization) ----
+    @property
+    def events(self) -> List[Event]:
+        """Materialized Event list — object view of the row store.
+
+        The returned list is cached and extended incrementally; callers
+        may mutate it (legacy tests do), which makes the object list
+        authoritative and disables the columnar fast paths.
+        """
+        cache = self._evcache
+        if cache is None:
+            cache = self._evcache = []
+        elif not self._legacy and len(cache) != self._cache_len:
+            self._legacy = True
+        if self._legacy:
+            return cache
+        rows, mat = self._rows, self._mat_rows
+        if mat < len(rows):
+            seq0 = self._seq0
+            cache.extend(_row_to_event(rows[i], seq0 + i)
+                         for i in range(mat, len(rows)))
+            self._mat_rows = len(rows)
+        self._cache_len = len(cache)
+        return cache
+
+    @property
+    def n_events(self) -> int:
+        """Event count without materializing the object view."""
+        if self._legacy:
+            return len(self._evcache)
+        cache = self._evcache
+        if cache is not None and len(cache) != self._cache_len:
+            self._legacy = True
+            return len(cache)
+        return len(self._rows)
+
+    @property
+    def last_recorded_seq(self) -> int:
+        """Seq of the most recently appended event (-1 if none ever)."""
+        if self._legacy:
+            cache = self._evcache
+            return cache[-1].seq if cache else -1
+        return self._next_seq - 1
+
+    def authoritative_rows(self) -> Optional[List[tuple]]:
+        """Row store, or None once the object view was mutated.
+
+        The columnar consumers (bulk kernels, ``vecreplay.lower()``)
+        gate on this: a mutated ``.events`` list means the rows no
+        longer describe the ledger and the object path must be used.
+        """
+        cache = self._evcache
+        if self._legacy or (cache is not None
+                            and len(cache) != self._cache_len):
+            self._legacy = True
+            return None
+        return self._rows
+
+    def _cache_key(self) -> Tuple[int, int, int]:
+        """Identity key for the vectorized-replay lowering cache."""
+        rows = self.authoritative_rows()
+        if rows is None:
+            ev = self._evcache
+            return (len(ev), len(self.client_node),
+                    ev[-1].seq if ev else -1)
+        return (len(rows), len(self.client_node),
+                self._seq0 + len(rows) - 1 if rows else -1)
+
     def record(self, kind: EventKind, client: int, nbytes: int = 0,
                rpc_type: str = "", peer: int = -1, rpc_ranges: int = 1,
                shard: int = 0, rpc_calls: int = 1, flush: str = "",
@@ -168,18 +304,41 @@ class EventLedger:
             retries += r
             if f:
                 failover = 1
-        seq = next(self._seq)
-        self.events.append(
-            Event(kind, client, nbytes, rpc_type, peer, seq,
-                  rpc_ranges, shard, rpc_calls, flush, linger, deps,
-                  opened_after, last_after, forced_after, members,
-                  retries, failover)
-        )
+        seq = self._next_seq
+        self._next_seq = seq + 1
+        row = (kind.value, client, nbytes, rpc_type, peer, rpc_ranges,
+               shard, rpc_calls, flush, linger, deps, opened_after,
+               last_after, forced_after, members, retries, failover)
+        if self._legacy:
+            self._evcache.append(_row_to_event(row, seq))
+            self._cache_len = len(self._evcache)
+        else:
+            if not self._rows:
+                self._seq0 = seq
+            self._rows.append(row)
         self.last_seq[client] = seq
         key = (kind, rpc_type)
         self._count_by_type[key] = self._count_by_type.get(key, 0) + 1
         self._count_by_kind[kind] = self._count_by_kind.get(kind, 0) + 1
         self._bytes_by_kind[kind] = self._bytes_by_kind.get(kind, 0) + nbytes
+
+    def bulk_account(self, count_by_type: Dict[Tuple[EventKind, str], int],
+                     bytes_by_kind: Dict[EventKind, int]) -> None:
+        """Apply a bulk kernel's deferred aggregate deltas in one call.
+
+        The bulk execution kernels (:meth:`BaseFS.bulk_write_run` etc.)
+        append rows directly and tally aggregates locally per run; the
+        deltas are commutative adds, so applying them at run end is
+        equivalent to per-event accounting.
+        """
+        cbt, cbk, bbk = (self._count_by_type, self._count_by_kind,
+                         self._bytes_by_kind)
+        for key, n in count_by_type.items():
+            cbt[key] = cbt.get(key, 0) + n
+            kind = key[0]
+            cbk[kind] = cbk.get(kind, 0) + n
+        for kind, nb in bytes_by_kind.items():
+            bbk[kind] = bbk.get(kind, 0) + nb
 
     def mark_phase(self, name: str) -> None:
         """Global barrier + phase boundary for the cost model."""
@@ -197,12 +356,19 @@ class EventLedger:
         stamp the first post-clear flush with a stale ``last_after``
         pointing at an event that no longer exists.  The vectorized
         replay's lowering cache (:mod:`repro.core.vecreplay`) keys on
-        event identity and is likewise invalidated.  ``_seq`` keeps
-        counting — replay only needs seqs contiguous, not zero-based.
+        event identity and is likewise invalidated.  The seq counter
+        keeps counting — replay only needs seqs contiguous, not
+        zero-based.  A previously materialized (or mutated) object view
+        is emptied in place and row storage becomes authoritative again.
         """
         for hook in self.on_barrier:
             hook()
-        self.events.clear()
+        self._rows.clear()
+        if self._evcache is not None:
+            self._evcache.clear()
+        self._mat_rows = 0
+        self._cache_len = 0
+        self._legacy = False
         self.last_seq.clear()
         self._count_by_type.clear()
         self._count_by_kind.clear()
@@ -491,7 +657,7 @@ class RPCBatcher:
                 # fences and drain closes synchronize the client in the
                 # DES — everything before them is acked.
                 self._unsynced.pop(client, None)
-        return self.ledger.events[-1].seq
+        return self.ledger.last_recorded_seq
 
     def _recover(self, client: int) -> None:
         """Failover recovery at a synchronization point (fault plane).
@@ -625,6 +791,74 @@ class RPCBatcher:
                 q.deps.append(d)
         if q.nranges >= self.max_ranges:
             self.flush(client, FLUSH_SIZE)
+
+    def submit_run(self, rpc_type: str, client: int, path: str, shard: int,
+                   members: List[Tuple[int, int]],
+                   deps: Tuple[int, ...] = ()) -> None:
+        """Array path: enqueue a whole run of same-(client, type, file,
+        shard) submissions in one call.
+
+        ``members`` is ``[(nranges, nbytes), ...]`` for a back-to-back
+        run — no intervening ledger event by this client between the
+        submissions.  Flush boundaries (the size cap), member clock
+        anchors, and dep edges are computed over the full run at once
+        instead of per call: every member between two boundaries shares
+        one anchor (nothing lands on the client's chain in between), and
+        each size flush re-anchors the members after it at the flush
+        event's seq.  Bitwise-equivalent to — and property-tested
+        against — the same sequence of scalar :meth:`submit` calls.
+        """
+        if not members:
+            return
+        if not (self.enabled and rpc_type in self.BATCHABLE):
+            for nranges, nbytes in members:
+                self.submit(rpc_type, client, path, shard, nranges,
+                            nbytes, deps)
+            return
+        raw = (rpc_type, path, shard)
+        key = self._keys.get(raw)
+        if key is None:
+            key = self._keys.setdefault(raw, raw)
+        q = self._open.get(client)
+        if q is not None and q.key is not key:
+            self.flush(client, FLUSH_SWITCH)
+            q = None
+        maxr = self.max_ranges
+        last_seq = self.ledger.last_seq
+        i, m = 0, len(members)
+        while i < m:
+            anchor = last_seq.get(client, -1)
+            if q is None:
+                q = self._open[client] = _SendQueue(key,
+                                                    opened_after=anchor)
+            # Boundary scan: fill the queue up to the size cap in one
+            # pass over the remaining run.
+            acc = q.nranges
+            j = i
+            while j < m and acc + members[j][0] <= maxr:
+                acc += members[j][0]
+                j += 1
+            if j == i and q.nranges == 0:
+                # A single member larger than the cap sits alone in a
+                # fresh queue (the scalar post-check flushes it below).
+                acc += members[j][0]
+                j += 1
+            if j > i:
+                nbytes = 0
+                for _nr, nb in members[i:j]:
+                    nbytes += nb
+                q.nbytes += nbytes
+                q.nranges = acc
+                q.calls += j - i
+                q.last_after = anchor
+                q.members.extend((anchor, nr) for nr, _nb in members[i:j])
+                for d in deps:
+                    if d not in q.deps:
+                        q.deps.append(d)
+                i = j
+            if i < m or q.nranges >= maxr:
+                self.flush(client, FLUSH_SIZE)
+                q = None
 
 
 _EMPTY_TREE = OwnerIntervalMap()
@@ -1154,3 +1388,883 @@ class BaseFS:
         f = c.files[h]
         global_eof = self.server.stat_eof(c.id, f.path, self.pfs.size(f.path))
         return max(global_eof, f.local_eof)
+
+    # =====================================================================
+    # Owner resolution shared by the scalar read path and the bulk kernel.
+    # =====================================================================
+    def bfs_resolve_segs(self, c: BFSClient, h: int, start: int, end: int,
+                         owners: List[Interval],
+                         ) -> List[Tuple[int, int, Optional[int]]]:
+        """Split ``[start, end)`` along owner intervals into read segments.
+
+        Returns ``[(s, e, owner)]`` covering the range: owned segments
+        carry the owning client id, unowned gaps the reader's own id
+        where its local buffer covers them (local writes are immediately
+        visible to the writer, Table 5), and ``None`` for the underlying
+        PFS.  This is the resolution the consistency layers' reads use
+        (:meth:`repro.core.consistency._LayeredFS._read_resolved`) and
+        the bulk read kernel shares it verbatim.
+        """
+        f = c.files[h]
+        segs: List[Tuple[int, int, Optional[int]]] = []
+        pos = start
+        for iv in sorted(owners, key=lambda v: v.start):
+            s, e = max(iv.start, start), min(iv.end, end)
+            if s > pos:
+                segs.append((pos, s, None))
+            if e > s:
+                segs.append((s, e, iv.value))
+            pos = max(pos, e)
+        if pos < end:
+            segs.append((pos, end, None))
+        resolved: List[Tuple[int, int, Optional[int]]] = []
+        for s, e, owner in segs:
+            if owner is not None:
+                resolved.append((s, e, owner))
+                continue
+            p = s
+            for ls, le, _ in f.local.buffer_runs(s, e):
+                if ls > p:
+                    resolved.append((p, ls, None))
+                resolved.append((ls, le, c.id))
+                p = le
+            if p < e:
+                resolved.append((p, e, None))
+        return resolved
+
+    # =====================================================================
+    # Columnar bulk execution kernels.
+    #
+    # These execute a RUN of homogeneous ops from a compiled op program
+    # (:mod:`repro.core.ops`) appending row tuples straight into the
+    # ledger's columnar store — no per-op Event objects, no per-op
+    # method chain.  They are BITWISE-equivalent to the scalar bfs_*
+    # sequence under the preconditions the consistency layers check
+    # before dispatching here (see ``_LayeredFS.run_ops``); the layer
+    # API is the only legal entry (lint rule ANA005) so every
+    # ``sync_op_kinds`` hook and fence stays at its recorded position.
+    # =====================================================================
+    def _bulk_write_run_cols(self, hmap: Dict[int, Tuple[BFSClient, int]],
+                             clients: List[int], offsets: List[int],
+                             sizes: List[int], lo: int, hi: int,
+                             payload_fn) -> None:
+        """Columnar write run for the attach-free placements.
+
+        Without the per-write attach (CommitFS/SessionFS/MPIIOFS defer
+        publication to their sync op) a write run never touches the
+        server, the batcher, or the fault plane — so the kernel splits
+        into column passes: payloads materialize in program order (the
+        callback may be stateful), ledger rows extend from per-(client,
+        nbytes) templates, accounting aggregates over a Counter, and
+        only the burst-buffer append walks op-by-op.  Rows, sequence
+        anchors, buffer state, and local maps are exactly what
+        :meth:`bulk_write_run`'s general loop produces.
+        """
+        led = self.ledger
+        rows = led._rows
+        if not rows:
+            led._seq0 = led._next_seq
+        base = led._next_seq
+        pc_l = clients[lo:hi]
+        pay = list(map(payload_fn, offsets[lo:hi], sizes[lo:hi]))
+        n = len(pay)
+        state: Dict[int, tuple] = {}
+        cidmap: Dict[int, int] = {}
+        mem_cids = set()
+        for pc in set(pc_l):
+            c, h = hmap[pc]
+            f = c.files[h]
+            log = c.buffer
+            state[pc] = (f, log, log._offs.append, log._parts.append, c)
+            cidmap[pc] = c.id
+            if c.tier == "mem":
+                mem_cids.add(c.id)
+        nb_l = [p.nbytes for p in pay]
+        cid_l = [cidmap[pc] for pc in pc_l]
+        key_l = list(zip(cid_l, nb_l))
+        row_cache: Dict[Tuple[int, int], tuple] = {}
+        cnt_ssd = nb_ssd = cnt_mem = nb_mem = 0
+        for key, kn in _Counter(key_l).items():
+            cid, nb = key
+            if cid in mem_cids:
+                kind = _MEM_W_V
+                cnt_mem += kn
+                nb_mem += nb * kn
+            else:
+                kind = _SSD_W_V
+                cnt_ssd += kn
+                nb_ssd += nb * kn
+            row_cache[key] = (kind, cid, nb) + _DATA_TAIL
+        rows.extend(map(row_cache.__getitem__, key_l))
+        led._next_seq = base + n
+        ls = led.last_seq
+        lastj: Dict[int, int] = {}
+        for j, cid in enumerate(cid_l):
+            lastj[cid] = j
+        for cid, j in lastj.items():
+            ls[cid] = base + j
+        spans: Dict[int, list] = {pc: [] for pc in state}
+        for pc, off, p, nb in zip(pc_l, offsets[lo:hi], pay, nb_l):
+            st = state[pc]
+            log = st[1]
+            bs = log.nbytes
+            st[2](bs)
+            st[3](p)
+            log.nbytes = bs + nb
+            spans[pc].append((off, off + nb, bs))
+        for pc, sp in spans.items():
+            if not sp:
+                continue
+            f = state[pc][0]
+            contiguous = True
+            mx = sp[0][1]
+            ps, pe, pb = sp[0]
+            for s, e, b in sp[1:]:
+                if e > mx:
+                    mx = e
+                if s != pe or b != pb + (pe - ps):
+                    contiguous = False
+                    break
+                ps, pe, pb = s, e, b
+            if not contiguous:
+                mx = max(e for _s, e, _b in sp)
+                for s, e, b in sp:
+                    f.local.record_write(s, e, b)
+            else:
+                f.local.record_write(sp[0][0], sp[-1][1], sp[0][2])
+            f.pos = sp[-1][1]
+            if mx > f.local_eof:
+                f.local_eof = mx
+        counts: Dict[Tuple[EventKind, str], int] = {}
+        nbytes: Dict[EventKind, int] = {}
+        if cnt_ssd:
+            counts[(EventKind.SSD_WRITE, "")] = cnt_ssd
+            nbytes[EventKind.SSD_WRITE] = nb_ssd
+        if cnt_mem:
+            counts[(EventKind.MEM_WRITE, "")] = cnt_mem
+            nbytes[EventKind.MEM_WRITE] = nb_mem
+        led.bulk_account(counts, nbytes)
+
+    def bulk_write_run(self, hmap: Dict[int, Tuple[BFSClient, int]],
+                       clients: List[int], offsets: List[int],
+                       sizes: List[int], lo: int, hi: int,
+                       payload_fn: Callable[[int, int], Payload],
+                       attach: bool = False) -> None:
+        """Execute the WRITE ops at columns ``[lo, hi)`` of an op program.
+
+        ``clients``/``offsets``/``sizes`` are the program's columns;
+        ``hmap`` maps program client ids to ``(BFSClient, handle)``.
+        Equivalent to ``seek(off); bfs_write(payload_fn(off, size))``
+        per op — plus the per-write ``bfs_attach`` when ``attach`` is
+        set (the PosixFS placement).  Local buffer-map updates are
+        deferred to the run end (nothing reads them mid-run; the
+        interval maps are canonical, so the final state is identical),
+        which turns a contiguous write stream into a single interval
+        splice.
+        """
+        led = self.ledger
+        rows = led._rows
+        if not rows:
+            led._seq0 = led._next_seq
+        nseq = led._next_seq
+        ls = led.last_seq
+        append = rows.append
+        server = self.server
+        batcher = server.batcher
+        batched = attach and batcher.enabled
+        shards = server.shards
+        nsh = server.num_shards
+        w = server.stripe
+        faults = led.faults
+        if self.materialize:
+            raw_fn = payload_fn
+
+            def payload_fn(off, size):  # noqa: F811 - byte-plane wrapper
+                return raw_fn(off, size).materialized()
+        if not attach:
+            # Attach-free placements never touch the server mid-run:
+            # the columnar passes record the identical ledger faster.
+            return self._bulk_write_run_cols(hmap, clients, offsets,
+                                             sizes, lo, hi, payload_fn)
+        crc_cache: Dict[str, int] = {}
+        row_cache: Dict[Tuple[int, int], tuple] = {}
+        # program cid -> (client, open-file, bfs cid, is_mem, spans)
+        state: Dict[int, tuple] = {}
+        cnt_ssd = nb_ssd = cnt_mem = nb_mem = 0
+        cnt_att = nb_att = 0
+        for i in range(lo, hi):
+            pc = clients[i]
+            st = state.get(pc)
+            if st is None:
+                c, h = hmap[pc]
+                st = state[pc] = (c, c.files[h], c.id, c.tier == "mem", [])
+            c, f, cid, is_mem, spans = st
+            off = offsets[i]
+            payload = payload_fn(off, sizes[i])
+            n = payload.nbytes
+            bs = c.buffer.append(payload)
+            rkey = (cid, n)
+            row = row_cache.get(rkey)
+            if row is None:
+                kind = _MEM_W_V if is_mem else _SSD_W_V
+                row = row_cache[rkey] = (kind, cid, n) + _DATA_TAIL
+            append(row)
+            if is_mem:
+                cnt_mem += 1
+                nb_mem += n
+            else:
+                cnt_ssd += 1
+                nb_ssd += n
+            ls[cid] = nseq
+            nseq += 1
+            end = off + n
+            spans.append((off, end, bs))
+            f.pos = end
+            if end > f.local_eof:
+                f.local_eof = end
+            if not attach:
+                continue
+            # PosixFS placement: attach the just-written run.  The range
+            # was written by exactly one append, so its buffer runs are
+            # the single span — no map lookup needed.
+            path = f.path
+            if nsh == 1:
+                groups = ((0, [(off, end)]),)
+            else:
+                crc = crc_cache.get(path)
+                if crc is None:
+                    crc = crc_cache[path] = crc32(path.encode())
+                s0, s1 = off // w, (end - 1) // w
+                if s0 == s1:
+                    groups = (((crc + s0) % nsh, [(off, end)]),)
+                else:
+                    groups = tuple(
+                        server.router.split_runs(path, [(off, end)]).items())
+            if batched:
+                # Through the batcher's array path: it records any flush
+                # events itself, so the seq counter must be live.
+                led._next_seq = nseq
+                for k, pieces in groups:
+                    batcher.submit_run("attach", cid, path, k,
+                                       [(len(pieces), 24 * len(pieces))])
+                    shards[k].tree(path).attach_many(pieces, cid)
+                nseq = led._next_seq
+            else:
+                for k, pieces in groups:
+                    npieces = len(pieces)
+                    retries = failover = 0
+                    if faults is not None:
+                        retries, fo = faults.on_rpc("attach", k)
+                        failover = 1 if fo else 0
+                    append((_RPC_V, cid, 24 * npieces, "attach", -1,
+                            npieces, k, 1, "", 0.0, (), -1, -1, -1, (),
+                            retries, failover))
+                    ls[cid] = nseq
+                    nseq += 1
+                    cnt_att += 1
+                    nb_att += 24 * npieces
+                    shards[k].tree(path).attach_many(pieces, cid)
+        led._next_seq = nseq
+        for c, f, _cid, _is_mem, spans in state.values():
+            if not spans:
+                continue
+            contiguous = True
+            ps, pe, pb = spans[0]
+            for s, e, b in spans[1:]:
+                if s != pe or b != pb + (pe - ps):
+                    contiguous = False
+                    break
+                ps, pe, pb = s, e, b
+            if contiguous:
+                f.local.record_write(spans[0][0], spans[-1][1], spans[0][2])
+                if attach:
+                    f.local.mark_attached(spans[0][0], spans[-1][1])
+            else:
+                for s, e, b in spans:
+                    f.local.record_write(s, e, b)
+                if attach:
+                    for s, e, _b in spans:
+                        f.local.mark_attached(s, e)
+            if attach:
+                self._shadow_owner_state(c, f)
+        counts: Dict[Tuple[EventKind, str], int] = {}
+        nbytes: Dict[EventKind, int] = {}
+        if cnt_ssd:
+            counts[(EventKind.SSD_WRITE, "")] = cnt_ssd
+            nbytes[EventKind.SSD_WRITE] = nb_ssd
+        if cnt_mem:
+            counts[(EventKind.MEM_WRITE, "")] = cnt_mem
+            nbytes[EventKind.MEM_WRITE] = nb_mem
+        if cnt_att:
+            counts[(EventKind.RPC, "attach")] = cnt_att
+            nbytes[EventKind.RPC] = nb_att
+        led.bulk_account(counts, nbytes)
+
+    def _bulk_read_run_vec(self, hmap: Dict[int, Tuple[BFSClient, int]],
+                           clients: List[int], offsets: List[int],
+                           sizes: List[int], lo: int, hi: int,
+                           expect_fn) -> Optional[int]:
+        """Vectorized query-mode read run (numpy), or None to fall back.
+
+        Resolves the whole run at once — stripe/shard mapping, owner-tree
+        lookups, and owner buffer-map translation are array ops; only row
+        construction and payload verification remain per-read.  Applies
+        when every read in the run is single-stripe, lands inside one
+        covering owner interval whose local map is a single contiguous
+        run, and no fault schedule is armed.  The attempt is *pure* until
+        every read has structurally resolved: any non-conforming read
+        returns None before the ledger, file positions, or verification
+        callback are touched, and the scalar kernel reruns the columns
+        from unchanged state.  Committed rows, sequence numbers, and
+        accounting are tuple-for-tuple what the scalar kernel records.
+        """
+        led = self.ledger
+        server = self.server
+        shards = server.shards
+        nsh = server.num_shards
+        w = server.stripe
+        clmap = self.clients
+        RPC = EventKind.RPC
+        NET = EventKind.NET_TRANSFER
+        MEM_READ = EventKind.MEM_READ
+        SSD_READ = EventKind.SSD_READ
+        n = hi - lo
+        pc_l = clients[lo:hi]
+        sz_l = sizes[lo:hi]
+        # Per-program-client state: all reads must target one path.
+        path = None
+        cidmap: Dict[int, int] = {}
+        fmap: Dict[int, object] = {}
+        mem_cids = set()
+        for pc in set(pc_l):
+            c, h = hmap[pc]
+            f = c.files[h]
+            if path is None:
+                path = f.path
+            elif f.path != path:
+                return None
+            cidmap[pc] = c.id
+            fmap[pc] = f
+            if c.tier == "mem":
+                mem_cids.add(c.id)
+        off_arr = _np.array(offsets[lo:hi], _np.int64)
+        sz_arr = _np.array(sz_l, _np.int64)
+        end_arr = off_arr + sz_arr
+        if nsh == 1:
+            k_arr = _np.zeros(n, _np.int64)
+        else:
+            s0 = off_arr // w
+            if not (s0 == (end_arr - 1) // w).all():
+                return None
+            k_arr = (crc32(path.encode()) + s0) % nsh
+        # Owner-tree lookup, one searchsorted per shard.
+        owner_arr = _np.empty(n, _np.int64)
+        for kv in range(nsh):
+            sel = _np.nonzero(k_arr == kv)[0]
+            if not sel.size:
+                continue
+            tree = shards[kv].peek(path)
+            ivals = tree._ivals
+            if not ivals:
+                return None
+            tends = _np.array(tree._ends, _np.int64)
+            tstarts = _np.array([iv.start for iv in ivals], _np.int64)
+            try:
+                tvals = _np.array([iv.value for iv in ivals], _np.int64)
+            except (TypeError, OverflowError, ValueError):
+                return None
+            so = off_arr[sel]
+            ti = _np.searchsorted(tends, so, side="right")
+            if int(ti.max()) >= len(ivals):
+                return None
+            if not ((tstarts[ti] <= so)
+                    & (end_arr[sel] <= tends[ti])).all():
+                return None
+            owner_arr[sel] = tvals[ti]
+        # Owner buffer-map translation: each owner must serve its range
+        # from a single contiguous local run (the bulk-write layout).
+        uniq, slot = _np.unique(owner_arr, return_inverse=True)
+        nu = len(uniq)
+        l_lo = _np.empty(nu, _np.int64)
+        l_hi = _np.empty(nu, _np.int64)
+        buf0 = _np.empty(nu, _np.int64)
+        # Owner extent logs, concatenated into one *dense* global byte
+        # space (each log's offsets start at 0 and are gapless, so the
+        # per-owner byte bases stack): one searchsorted then resolves
+        # every read's payload extent at once.
+        gparts: List[Payload] = []
+        goffs: List[int] = []
+        nparts: List[int] = []
+        logbytes: List[int] = []
+        tiers: List[str] = []
+        net_tails: List[tuple] = []
+        for j, o in enumerate(uniq.tolist()):
+            oc = clmap.get(o)
+            if oc is None:
+                return None
+            of = self._find_owner_state(oc, path)
+            if of is None:
+                return None
+            livals = of.local._ivals
+            if len(livals) != 1:
+                return None
+            iv = livals[0]
+            l_lo[j] = iv.start
+            l_hi[j] = iv.end
+            buf0[j] = iv.value.buf_start
+            log = oc.buffer
+            gparts.extend(log._parts)
+            goffs.extend(log._offs)
+            nparts.append(len(log._offs))
+            logbytes.append(log.nbytes)
+            tier = oc.tier
+            tiers.append(tier)
+            net_tails.append((tier, o, 1, 0, 1, "", 0.0, (), -1, -1, -1,
+                              (), 0, 0))
+        ll = l_lo[slot]
+        if not ((ll <= off_arr) & (end_arr <= l_hi[slot])).all():
+            return None
+        bs_arr = buf0[slot] + (off_arr - ll)
+        lb = _np.array(logbytes, _np.int64)
+        cum = _np.cumsum(lb)
+        byte_base = cum - lb
+        total_bytes = int(cum[-1]) if nu else 0
+        goffs_np = _np.array(goffs, _np.int64) \
+            + _np.repeat(byte_base, _np.array(nparts, _np.int64))
+        part_nb = _np.diff(goffs_np, append=total_bytes)
+        gbs = bs_arr + byte_base[slot]
+        gidx = _np.searchsorted(goffs_np, gbs, side="right") - 1
+        s_arr = gbs - goffs_np[gidx]
+        pn = part_nb[gidx]
+        if not (s_arr + sz_arr <= pn).all():
+            return None  # multi-extent payloads: the scalar kernel chains
+        exact = (s_arr == 0) & (sz_arr == pn)
+        cid_l = [cidmap[pc] for pc in pc_l]
+        cid_arr = _np.array(cid_l, _np.int64)
+        net_mask = owner_arr != cid_arr
+        # Row construction: qrow + data row per read.  All-remote runs
+        # (the benchmark shape) build both row streams as comprehensions
+        # and interleave them at C speed; local reads take a plain loop.
+        tails = [(24, "query", -1, 1, kv, 1, "", 0.0, (), -1, -1, -1,
+                  (), 0, 0) for kv in range(nsh)]
+        k_l = k_arr.tolist()
+        sl_l = slot.tolist()
+        cnt_loc_ssd = cnt_loc_mem = nb_loc_ssd = nb_loc_mem = 0
+        if bool(net_mask.all()):
+            qrows = [(_RPC_V, cid) + tails[kv]
+                     for cid, kv in zip(cid_l, k_l)]
+            drows = [(_NET_V, cid, size) + net_tails[sl]
+                     for cid, size, sl in zip(cid_l, sz_l, sl_l)]
+            newrows = list(itertools.chain.from_iterable(
+                zip(qrows, drows)))
+        else:
+            ow_l = owner_arr.tolist()
+            newrows = []
+            ap = newrows.append
+            for j in range(n):
+                size = sz_l[j]
+                cid = cid_l[j]
+                ap((_RPC_V, cid) + tails[k_l[j]])
+                if ow_l[j] == cid:
+                    kind = _MEM_R_V if cid in mem_cids else _SSD_R_V
+                    ap((kind, cid, size) + _DATA_TAIL)
+                    if cid in mem_cids:
+                        cnt_loc_mem += 1
+                        nb_loc_mem += size
+                    else:
+                        cnt_loc_ssd += 1
+                        nb_loc_ssd += size
+                else:
+                    ap((_NET_V, cid, size) + net_tails[sl_l[j]])
+        parts_out: Optional[List[Payload]] = None
+        if expect_fn is not None:
+            if bool(exact.all()):
+                parts_out = [gparts[g] for g in gidx.tolist()]
+            else:
+                ex_l = exact.tolist()
+                s_l = s_arr.tolist()
+                gi_l = gidx.tolist()
+                parts_out = [
+                    gparts[g] if hit else gparts[g].slice(s, sz)
+                    for g, hit, s, sz in zip(gi_l, ex_l, s_l, sz_l)]
+        off_l = off_arr.tolist()
+        end_l = end_arr.tolist()
+        lastj: Dict[int, int] = {}
+        for j, cid in enumerate(cid_l):
+            lastj[cid] = j
+        lastend: Dict[int, int] = {}
+        for pc, e in zip(pc_l, end_l):
+            lastend[pc] = e
+        # Structural resolution complete — commit, then verify.
+        rows = led._rows
+        if not rows:
+            led._seq0 = led._next_seq
+        base_seq = led._next_seq
+        rows.extend(newrows)
+        led._next_seq = base_seq + 2 * n
+        ls = led.last_seq
+        for cid, j in lastj.items():
+            ls[cid] = base_seq + 2 * j + 1
+        for pc, e in lastend.items():
+            fmap[pc].pos = e
+        counts: Dict[Tuple[EventKind, str], int] = {(RPC, "query"): n}
+        nbytes: Dict[EventKind, int] = {RPC: 24 * n}
+        if cnt_loc_ssd:
+            counts[(SSD_READ, "")] = cnt_loc_ssd
+            nbytes[SSD_READ] = nb_loc_ssd
+        if cnt_loc_mem:
+            counts[(MEM_READ, "")] = cnt_loc_mem
+            nbytes[MEM_READ] = nb_loc_mem
+        if bool(net_mask.any()):
+            nb_net = int(sz_arr[net_mask].sum())
+            cnt_net: Dict[str, int] = {}
+            per_owner = _np.bincount(slot[net_mask],
+                                     minlength=nu).tolist()
+            for j, cval in enumerate(per_owner):
+                if cval:
+                    t = tiers[j]
+                    cnt_net[t] = cnt_net.get(t, 0) + cval
+            for t, cval in cnt_net.items():
+                counts[(NET, t)] = cval
+            nbytes[NET] = nb_net
+        led.bulk_account(counts, nbytes)
+        verified = 0
+        if expect_fn is not None:
+            # ``key_for`` marks a pure expectation whose symbolic key
+            # can be compared against the payload's without building
+            # the expected object; a key miss (or keyless payload)
+            # falls back to the full comparison.
+            kf = getattr(expect_fn, "key_for", None)
+            for start, size, part in zip(off_l, sz_l, parts_out):
+                if kf is not None:
+                    pk = part.key()
+                    if pk is not None and pk == kf(start, size):
+                        verified += 1
+                        continue
+                ex = expect_fn(start, size)
+                if part is not ex and part != ex:
+                    raise AssertionError(
+                        f"bulk read mismatch at offset {start}")
+                verified += 1
+        return verified
+
+    def bulk_read_run(self, hmap: Dict[int, Tuple[BFSClient, int]],
+                      clients: List[int], offsets: List[int],
+                      sizes: List[int], lo: int, hi: int,
+                      owner_maps: Optional[Dict[int, object]] = None,
+                      expect_fn=None, query: bool = False) -> int:
+        """Execute the READ ops at columns ``[lo, hi)`` of an op program.
+
+        ``clients``/``offsets``/``sizes`` are the program's columns;
+        ``hmap`` maps program client ids to ``(BFSClient, handle)``.
+        Equivalent to ``seek(off); read(size)`` per op at the layer
+        level.  With ``query`` (the PosixFS/CommitFS placement) the
+        owner lookup is performed here — the per-shard query RPC rows
+        and tree lookups of :meth:`GlobalServer.query`; otherwise
+        owners come from ``owner_maps`` (program cid -> the handle's
+        SessionFS/MPIIOFS snapshot cache, or None).  Each read's
+        payload is verified against ``expect_fn(off, size)`` when
+        given; returns the number of reads verified.
+
+        The hot path — a block-aligned read inside one stripe, fully
+        inside one owner's range, served by one buffer extent — runs
+        on single-bisect lookups (:meth:`IntervalMap.sole_cover` /
+        ``sole_run``) and cached row templates; anything else falls
+        back to the general grouped-query / segment-resolution code,
+        which is row-for-row what the scalar path records.
+
+        Large fault-free query runs first attempt the numpy-vectorized
+        resolver (:meth:`_bulk_read_run_vec`); it commits identical rows
+        or declines without side effects.
+        """
+        if (query and _np is not None and hi - lo >= 256
+                and self.ledger.faults is None):
+            r = self._bulk_read_run_vec(hmap, clients, offsets, sizes,
+                                        lo, hi, expect_fn)
+            if r is not None:
+                return r
+        led = self.ledger
+        rows = led._rows
+        if not rows:
+            led._seq0 = led._next_seq
+        nseq = led._next_seq
+        ls = led.last_seq
+        append = rows.append
+        server = self.server
+        shards = server.shards
+        nsh = server.num_shards
+        w = server.stripe
+        faults = led.faults
+        clmap = self.clients
+        pfs_files = self.pfs._files
+        RPC = EventKind.RPC
+        NET = EventKind.NET_TRANSFER
+        MEM_READ = EventKind.MEM_READ
+        SSD_READ = EventKind.SSD_READ
+        crc_cache: Dict[str, int] = {}
+        # program cid -> (client, handle, open-file, bfs cid, path,
+        # owner snapshot map, path crc, per-shard tree cache, per-path
+        # owner-state cache)
+        state: Dict[int, tuple] = {}
+        path_trees: Dict[str, list] = {}
+        path_owners: Dict[str, dict] = {}
+        q_tails: Dict[int, tuple] = {}
+        loc_rows: Dict[Tuple[int, int], tuple] = {}
+        cnt: Dict[Tuple[EventKind, str], int] = {}
+        nb: Dict[EventKind, int] = {}
+        cnt_q = cnt_loc_ssd = cnt_loc_mem = 0
+        nb_q = nb_loc_ssd = nb_loc_mem = nb_net = 0
+        cnt_net: Dict[str, int] = {}
+        verified = 0
+        for i in range(lo, hi):
+            pc = clients[i]
+            st = state.get(pc)
+            if st is None:
+                c, h = hmap[pc]
+                f = c.files[h]
+                path = f.path
+                om = None if owner_maps is None else owner_maps.get(pc)
+                crc = crc_cache.get(path)
+                if crc is None:
+                    crc = crc_cache[path] = crc32(path.encode())
+                trees = path_trees.get(path)
+                if trees is None:
+                    trees = path_trees[path] = [None] * nsh
+                powners = path_owners.get(path)
+                if powners is None:
+                    powners = path_owners[path] = {}
+                st = state[pc] = (c, h, f, c.id, path, om, crc, trees,
+                                  powners)
+            c, h, f, cid, path, omap, crc, trees, powners = st
+            start = offsets[i]
+            size = sizes[i]
+            end = start + size
+            owner = None
+            owners: Optional[List[Interval]] = None
+            qrow = None
+            if query:
+                if nsh == 1:
+                    k = 0
+                    single = True
+                else:
+                    s0 = start // w
+                    single = s0 == (end - 1) // w
+                    if single:
+                        k = (crc + s0) % nsh
+                if single:
+                    retries = failover = 0
+                    if faults is not None:
+                        retries, fo = faults.on_rpc("query", k)
+                        failover = 1 if fo else 0
+                    if retries or failover:
+                        qrow = (_RPC_V, cid, 24, "query", -1, 1, k, 1,
+                                "", 0.0, (), -1, -1, -1, (), retries,
+                                failover)
+                    else:
+                        tail = q_tails.get(k)
+                        if tail is None:
+                            tail = q_tails[k] = (
+                                24, "query", -1, 1, k, 1, "", 0.0, (),
+                                -1, -1, -1, (), 0, 0)
+                        qrow = (_RPC_V, cid) + tail
+                    cnt_q += 1
+                    nb_q += 24
+                    tv = trees[k]
+                    if tv is None:
+                        tree = shards[k].peek(path)
+                        tv = trees[k] = (tree._ends, tree._ivals, tree)
+                    ends, ivals, tree = tv
+                    ti = bisect_right(ends, start)
+                    if ti < len(ivals):
+                        iv = ivals[ti]
+                        if iv.start <= start and end <= iv.end:
+                            owner = iv.value
+                    if owner is None:
+                        # No single covering owner: record the query row
+                        # now, then the general query + resolution.
+                        append(qrow)
+                        qrow = None
+                        ls[cid] = nseq
+                        nseq += 1
+                        owners = _coalesce(tree.owners(start, end))
+                else:
+                    groups = tuple(server.router.split_runs(
+                        path, [(start, end)]).items())
+                    found: List[Interval] = []
+                    for k, pieces in groups:
+                        npieces = len(pieces)
+                        retries = failover = 0
+                        if faults is not None:
+                            retries, fo = faults.on_rpc("query", k)
+                            failover = 1 if fo else 0
+                        append((_RPC_V, cid, 24 * npieces, "query", -1,
+                                npieces, k, 1, "", 0.0, (), -1, -1, -1,
+                                (), retries, failover))
+                        ls[cid] = nseq
+                        nseq += 1
+                        cnt_q += 1
+                        nb_q += 24 * npieces
+                        tree = shards[k].peek(path)
+                        for s, e in pieces:
+                            found.extend(tree.owners(s, e))
+                    owners = _coalesce(found)
+            elif omap is not None:
+                iv = omap.sole_cover(start, end)
+                if iv is not None:
+                    owner = iv.value
+                else:
+                    owners = omap.owners(start, end)
+            else:
+                owners = []
+            if owner is not None:
+                # Single fully-owned segment: resolve and read without
+                # the general segment machinery.
+                ost = powners.get(owner)
+                if ost is None:
+                    oc = clmap.get(owner)
+                    if oc is None:
+                        raise BFSError(f"unknown owner client {owner}")
+                    of = self._find_owner_state(oc, path)
+                    if of is None:
+                        lends = livals = None
+                    else:
+                        lm = of.local
+                        lends, livals = lm._ends, lm._ivals
+                    tier = oc.tier
+                    ost = powners[owner] = (
+                        oc, of, lends, livals, oc.buffer.read, tier,
+                        (tier, owner, 1, 0, 1, "", 0.0, (), -1, -1, -1,
+                         (), 0, 0))
+                oc, of, lends, livals, bread, otier, net_tail = ost
+                bs = None
+                if lends is not None:
+                    li = bisect_right(lends, start)
+                    if li < len(livals):
+                        lv = livals[li]
+                        if lv.start <= start and end <= lv.end:
+                            bs = lv.value.buf_start + (start - lv.start)
+                if bs is not None:
+                    part = bread(bs, size)
+                    if owner == cid:
+                        rkey = (cid, size)
+                        entry = loc_rows.get(rkey)
+                        if entry is None:
+                            is_mem = c.tier == "mem"
+                            kind = _MEM_R_V if is_mem else _SSD_R_V
+                            entry = loc_rows[rkey] = (
+                                (kind, cid, size) + _DATA_TAIL, is_mem)
+                        row, is_mem = entry
+                        if is_mem:
+                            cnt_loc_mem += 1
+                            nb_loc_mem += size
+                        else:
+                            cnt_loc_ssd += 1
+                            nb_loc_ssd += size
+                    else:
+                        row = (_NET_V, cid, size) + net_tail
+                        cnt_net[otier] = cnt_net.get(otier, 0) + 1
+                        nb_net += size
+                    if qrow is not None:
+                        append(qrow)
+                        append(row)
+                        ls[cid] = nseq + 1
+                        nseq += 2
+                    else:
+                        append(row)
+                        ls[cid] = nseq
+                        nseq += 1
+                    f.pos = end
+                    if expect_fn is not None:
+                        ex = expect_fn(start, size)
+                        if part is not ex and part != ex:
+                            raise AssertionError(
+                                f"bulk read mismatch at offset {start}")
+                        verified += 1
+                    continue
+                # Owner's local map is fragmented over the range (or the
+                # owner never covered it): the general segment path below
+                # reads run-by-run — and raises on a bogus owner.
+                if qrow is not None:
+                    append(qrow)
+                    ls[cid] = nseq
+                    nseq += 1
+                resolved = [(start, end, owner)]
+            else:
+                resolved = self.bfs_resolve_segs(c, h, start, end, owners)
+            parts: List[Payload] = []
+            for s, e, ow in resolved:
+                sz = e - s
+                if ow is None:
+                    pf = pfs_files.get(path)
+                    parts.append(pf.read(s, sz) if pf is not None
+                                 else ZeroExtent(sz))
+                    kind = EventKind.PFS_READ
+                    key = (kind, "")
+                    append((_PFS_R_V, cid, sz) + _DATA_TAIL)
+                else:
+                    ost = powners.get(ow)
+                    if ost is None:
+                        oc = clmap.get(ow)
+                        if oc is None:
+                            raise BFSError(f"unknown owner client {ow}")
+                        of = self._find_owner_state(oc, path)
+                        if of is None:
+                            lends = livals = None
+                        else:
+                            lm = of.local
+                            lends, livals = lm._ends, lm._ivals
+                        tier = oc.tier
+                        ost = powners[ow] = (
+                            oc, of, lends, livals, oc.buffer.read, tier,
+                            (tier, ow, 1, 0, 1, "", 0.0, (), -1, -1, -1,
+                             (), 0, 0))
+                    oc, of = ost[0], ost[1]
+                    if of is None or not of.local.covers(s, e):
+                        raise BFSError(
+                            f"owner {ow} does not own [{s},{e}) of {path}"
+                        )
+                    for fs_, fe_, bs_ in of.local.buffer_runs(s, e):
+                        parts.append(oc.buffer_read(bs_, fe_ - fs_))
+                    if ow == cid:
+                        kind = (MEM_READ if c.tier == "mem" else SSD_READ)
+                        key = (kind, "")
+                        append((kind.value, cid, sz) + _DATA_TAIL)
+                    else:
+                        # NET rows carry the owner's device tier in
+                        # rpc_type (the count-by-type key) and the owner
+                        # in peer.
+                        kind = NET
+                        key = (kind, oc.tier)
+                        append((_NET_V, cid, sz, oc.tier, ow, 1, 0, 1,
+                                "", 0.0, (), -1, -1, -1, (), 0, 0))
+                ls[cid] = nseq
+                nseq += 1
+                cnt[key] = cnt.get(key, 0) + 1
+                nb[kind] = nb.get(kind, 0) + sz
+            f.pos = end
+            if expect_fn is not None:
+                data = parts[0] if len(parts) == 1 else concat(parts)
+                if data != expect_fn(start, size):
+                    raise AssertionError(
+                        f"bulk read mismatch at offset {start}")
+                verified += 1
+        led._next_seq = nseq
+        counts = dict(cnt)
+        nbytes = dict(nb)
+        if cnt_q:
+            counts[(RPC, "query")] = cnt_q
+            nbytes[RPC] = nb_q
+        if cnt_loc_ssd:
+            counts[(SSD_READ, "")] = counts.get((SSD_READ, ""), 0) \
+                + cnt_loc_ssd
+            nbytes[SSD_READ] = nbytes.get(SSD_READ, 0) + nb_loc_ssd
+        if cnt_loc_mem:
+            counts[(MEM_READ, "")] = counts.get((MEM_READ, ""), 0) \
+                + cnt_loc_mem
+            nbytes[MEM_READ] = nbytes.get(MEM_READ, 0) + nb_loc_mem
+        if cnt_net:
+            for tier, v in cnt_net.items():
+                counts[(NET, tier)] = counts.get((NET, tier), 0) + v
+            nbytes[NET] = nbytes.get(NET, 0) + nb_net
+        led.bulk_account(counts, nbytes)
+        return verified

@@ -23,9 +23,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import ops as opstream
 from repro.core.basefs import SEEK_SET, BaseFS, BFSClient
 from repro.core.extents import Payload, concat
 from repro.core.intervals import Interval, OwnerIntervalMap
+from repro.core.routing import StaticRouter
 
 
 @dataclass
@@ -128,39 +130,135 @@ class _LayeredFS:
         start = fs.bfs_tell(c, h)
         end = start + size
         parts: List[Payload] = []
-        pos = start
-        segs: List[Tuple[int, int, Optional[int]]] = []
-        for iv in sorted(owners, key=lambda v: v.start):
-            s, e = max(iv.start, start), min(iv.end, end)
-            if s > pos:
-                segs.append((pos, s, None))
-            if e > s:
-                segs.append((s, e, iv.value))
-            pos = max(pos, e)
-        if pos < end:
-            segs.append((pos, end, None))
-        # Local writes are immediately visible to the writing process
-        # (Table 5): prefer the reader's own buffer over the PFS for
-        # unowned segments it has written.
-        f = c.files[h]
-        resolved: List[Tuple[int, int, Optional[int]]] = []
-        for s, e, owner in segs:
-            if owner is not None:
-                resolved.append((s, e, owner))
-                continue
-            p = s
-            for ls, le, _ in f.local.buffer_runs(s, e):
-                if ls > p:
-                    resolved.append((p, ls, None))
-                resolved.append((ls, le, c.id))
-                p = le
-            if p < e:
-                resolved.append((p, e, None))
-        for s, e, owner in resolved:
+        # Segment resolution (owner split + local-write preference,
+        # Table 5) is shared with the bulk read kernel.
+        for s, e, owner in fs.bfs_resolve_segs(c, h, start, end, owners):
             fs.bfs_seek(c, h, s, SEEK_SET)
             parts.append(fs.bfs_read(c, h, e - s, owner))
         fs.bfs_seek(c, h, end, SEEK_SET)
         return concat(parts)
+
+    # ---- bulk submission API (op programs) ----
+    def run_ops(self, program: "opstream.OpProgram",
+                handles: Dict[int, FileHandle],
+                payload_fn=None, expect_fn=None) -> int:
+        """Execute a compiled op program (:mod:`repro.core.ops`).
+
+        This is the layer's bulk submission API — and the only legal
+        entry into the BaseFS bulk kernels (lint rule ANA005).  Runs of
+        WRITE/READ ops dispatch to the columnar kernels when the
+        deployment qualifies; everything else — and every control op —
+        executes through the layer's own scalar methods, so each sync
+        point, fence, and ``sync_op_kinds`` hook runs at exactly the
+        position the scalar loop would have run it.  The resulting
+        ledger is bitwise-identical to the scalar op-by-op loop either
+        way (the golden/hypothesis contract in ``docs/ARCHITECTURE.md``).
+
+        ``handles`` maps the program's client ids to open
+        :class:`FileHandle`\\ s.  ``payload_fn(offset, size)`` supplies
+        write payloads (required when the program contains writes);
+        ``expect_fn(offset, size)``, when given, verifies every read.
+        Returns the number of reads verified.
+        """
+        fs = self.fs
+        ops_col = program.op
+        cl_col = program.client
+        off_col = program.offset
+        sz_col = program.size
+        n = len(ops_col)
+        batcher = fs.server.batcher
+        enabled = batcher.enabled
+        # Kernel eligibility.  The kernels append ledger rows directly,
+        # skipping the pre_record hooks — legal only when the hook list
+        # is exactly the batcher's activity hook AND it is provably a
+        # no-op for the run: with the batcher disabled the hook never
+        # fires, and with linger > 0 it ignores data events.  Zero
+        # linger (flush-before-next-event semantics) and foreign hooks
+        # force the scalar path.  Query-placement models additionally
+        # need the static router (adaptive routing observes/migrates on
+        # every RPC mid-run) and a disabled batcher on the read side
+        # (dep flushes anchor to live queue state).
+        cols_ok = fs.ledger.authoritative_rows() is not None
+        hooks_ok = fs.ledger.pre_record == [batcher._on_client_activity]
+        static = type(fs.server.router) is StaticRouter
+        posix = self.name == "posix"
+        qread = self.name in ("posix", "commit")
+        write_fast = (cols_ok and hooks_ok
+                      and (not enabled or batcher.linger > 0.0)
+                      and (static or not posix))
+        read_fast = (cols_ok and hooks_ok and not enabled
+                     and (static or not qread))
+        # Program cid -> (BFSClient, handle) / owner-cache maps for the
+        # kernels, built once per submission on first use.
+        hmap = None
+        omap = None
+        verified = 0
+        i = 0
+        while i < n:
+            o = ops_col[i]
+            if o == opstream.OP_WRITE:
+                j = i + 1
+                while j < n and ops_col[j] == opstream.OP_WRITE:
+                    j += 1
+                if payload_fn is None:
+                    raise ValueError("op program contains writes but no "
+                                     "payload_fn was given")
+                if write_fast:
+                    if hmap is None:
+                        hmap = {cid: (fh.client, fh.bfs_handle)
+                                for cid, fh in handles.items()}
+                    fs.bulk_write_run(hmap, cl_col, off_col, sz_col, i, j,
+                                      payload_fn, attach=posix)
+                else:
+                    for k in range(i, j):
+                        fh = handles[cl_col[k]]
+                        off = off_col[k]
+                        self.seek(fh, off)
+                        self.write(fh, payload_fn(off, sz_col[k]))
+                i = j
+            elif o == opstream.OP_READ:
+                j = i + 1
+                while j < n and ops_col[j] == opstream.OP_READ:
+                    j += 1
+                if read_fast:
+                    if hmap is None:
+                        hmap = {cid: (fh.client, fh.bfs_handle)
+                                for cid, fh in handles.items()}
+                    if not qread and omap is None:
+                        omap = {cid: fh.owner_cache
+                                for cid, fh in handles.items()}
+                    verified += fs.bulk_read_run(
+                        hmap, cl_col, off_col, sz_col, i, j,
+                        owner_maps=omap, expect_fn=expect_fn, query=qread)
+                else:
+                    for k in range(i, j):
+                        fh = handles[cl_col[k]]
+                        off = off_col[k]
+                        self.seek(fh, off)
+                        data = self.read(fh, sz_col[k])
+                        if expect_fn is not None:
+                            if data != expect_fn(off, sz_col[k]):
+                                raise AssertionError(
+                                    f"read mismatch at offset {off}")
+                            verified += 1
+                i = j
+            else:
+                fh = handles[cl_col[i]]
+                if o == opstream.OP_COMMIT:
+                    self.commit(fh)
+                elif o == opstream.OP_SESSION_OPEN:
+                    self.session_open(fh)
+                elif o == opstream.OP_SESSION_CLOSE:
+                    self.session_close(fh)
+                elif o == opstream.OP_FILE_SYNC:
+                    self.file_sync(fh)
+                else:
+                    raise ValueError(f"unknown opcode {o}")
+                # Sync ops may swap a handle's owner_cache snapshot:
+                # rebuild the kernels' owner-map view on the next run.
+                omap = None
+                i += 1
+        return verified
 
 
 class PosixFS(_LayeredFS):

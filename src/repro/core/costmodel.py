@@ -153,7 +153,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.core.basefs import (RPC_FENCE_MARKER, SYNC_FLUSH, Event,
                                EventKind, EventLedger)
@@ -243,6 +243,32 @@ class PhaseResult:
         )
 
 
+class ReplayResult(List[PhaseResult]):
+    """``List[PhaseResult]`` plus replay-engine observability.
+
+    Behaves exactly like the list every existing caller indexes and
+    iterates; two extra attributes say how the ledger was actually
+    priced:
+
+    * ``engine`` — the implementation that ran: ``"scalar"`` or
+      ``"vector"``.
+    * ``fallback_reason`` — non-``None`` exactly when
+      ``engine="vector"`` was *requested* but the scalar reference path
+      ran instead (the ledger could not be lowered); carries the
+      :class:`~repro.core.vecreplay.UnsupportedLedger` message.
+
+    The perf harness copies both fields into its bench JSON rows so a
+    silent scalar fallback can never masquerade as a vector timing.
+    """
+
+    def __init__(self, phases: Iterable[PhaseResult] = (),
+                 engine: str = "scalar",
+                 fallback_reason: Optional[str] = None) -> None:
+        super().__init__(phases)
+        self.engine = engine
+        self.fallback_reason = fallback_reason
+
+
 class _Resource:
     """FIFO resource with an availability clock."""
 
@@ -303,7 +329,7 @@ class CostModel:
                engine: str = "scalar",
                faults: Optional[object] = None,
                ack_scope: str = "connection",
-               ) -> List[PhaseResult]:
+               ) -> "ReplayResult":
         """Price the ledger; optionally append per-event ``(event, start,
         finish)`` DES times to ``trace`` (for a flushed batch, ``start``
         is its virtual-clock departure) and per-batch :class:`FlushTrace`
@@ -317,8 +343,10 @@ class CostModel:
         ``record_order``/``exec_order``, ``record_splits``/
         ``exec_splits``) are scalar-only; the vector engine rejects
         them.  A ledger the vector engine cannot lower (non-contiguous
-        seqs from a hand-built ledger) silently falls back to the
-        scalar path — results are identical either way.
+        seqs from a hand-built ledger, or a fault-stamped one) falls
+        back to the scalar path — results are identical either way,
+        and the returned :class:`ReplayResult` reports the substitution
+        in ``fallback_reason`` (``engine`` says which path really ran).
 
         ``ack_window`` bounds the unacked fire-and-forget attach flushes
         a client chain may run ahead of; ``None`` uses the deployment's
@@ -355,6 +383,7 @@ class CostModel:
         ``"global"`` one-gate-per-client window."""
         if engine not in ("scalar", "vector"):
             raise ValueError(f"unknown replay engine {engine!r}")
+        fallback_reason: Optional[str] = None
         if ack_scope not in ("connection", "global"):
             raise ValueError(f"unknown ack_scope {ack_scope!r}")
         if engine == "vector":
@@ -375,11 +404,15 @@ class CostModel:
                     "record_splits/exec_splits); use engine='scalar'")
             from repro.core import vecreplay
             try:
-                return vecreplay.replay_vectorized(
-                    self.hw, ledger, ack_window=ack_window,
-                    honor_edges=honor_edges)
-            except vecreplay.UnsupportedLedger:
-                pass  # fall through to the scalar reference path
+                return ReplayResult(
+                    vecreplay.replay_vectorized(
+                        self.hw, ledger, ack_window=ack_window,
+                        honor_edges=honor_edges),
+                    engine="vector")
+            except vecreplay.UnsupportedLedger as exc:
+                # Scalar reference path below; the substitution is
+                # surfaced, not silent (satellite: observability).
+                fallback_reason = str(exc)
         if faults is None:
             faults = getattr(ledger, "faults", None)
         fsched = (getattr(faults, "schedule", faults)
@@ -839,7 +872,8 @@ class CostModel:
                 )
             )
             now = end  # global barrier
-        return results
+        return ReplayResult(results, engine="scalar",
+                            fallback_reason=fallback_reason)
 
     # Convenience: one phase by name.
     def phase(self, ledger: EventLedger, name: str) -> PhaseResult:

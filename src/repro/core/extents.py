@@ -102,12 +102,20 @@ class Payload:
         return None
 
     def __eq__(self, other: object) -> bool:
+        if self is other:
+            return True
         if isinstance(other, (bytes, bytearray, memoryview)):
             other = ByteSlab(bytes(other))
         if not isinstance(other, Payload):
             return NotImplemented
         if self.nbytes != other.nbytes:
             return False
+        # Atom-to-atom symbolic hit (the benchmark verify path: two
+        # pattern extents with one descriptor each) — skip building the
+        # atom lists entirely.
+        k = self.key()
+        if k is not None and k == other.key():
+            return True
         mine = [a.key() for a in self.atoms()]
         theirs = [b.key() for b in other.atoms()]
         if None not in mine and mine == theirs:
@@ -353,8 +361,17 @@ class ExtentLog:
             raise ValueError(f"read [{start}, {start + size}) outside the extent log")
         if size == 0:
             return ZeroExtent(0)
-        parts: List[Payload] = []
         i = bisect.bisect_right(self._offs, start) - 1
+        base, p = self._offs[i], self._parts[i]
+        s = start - base
+        if s + size <= p.nbytes:
+            # Whole read inside one appended extent (block-aligned
+            # reads of block-aligned writes — the benchmark hot path):
+            # no chain, no re-coalescing; the stored payload (or a
+            # window of it) IS the result.  Payloads are immutable, so
+            # handing the stored object back is safe.
+            return p if s == 0 and size == p.nbytes else p.slice(s, size)
+        parts: List[Payload] = []
         pos, end = start, start + size
         while pos < end:
             base, p = self._offs[i], self._parts[i]

@@ -95,6 +95,24 @@ class IntervalMap:
             pos = max(pos, iv.end)
         return pos >= end
 
+    def sole_cover(self, start: int, end: int) -> Optional[Interval]:
+        """The single stored interval covering ALL of [start, end), or None.
+
+        One bisect, no clipping, no list: the bulk read kernel's fast
+        path (a read fully inside one owner's range — the common case
+        for block-aligned workloads) resolves with this instead of
+        ``query`` + ``covers``.  ``None`` means "not covered by one
+        interval" — multi-interval coverage and gaps both fall back to
+        the general query path, so this is an accelerator, never an
+        answer-changer.
+        """
+        i = bisect.bisect_right(self._ends, start)
+        if i < len(self._ivals):
+            iv = self._ivals[i]
+            if iv.start <= start and end <= iv.end:
+                return iv
+        return None
+
     def gaps(self, start: int, end: int) -> List[Tuple[int, int]]:
         """Sub-ranges of [start, end) not covered by any interval."""
         out: List[Tuple[int, int]] = []
@@ -121,6 +139,17 @@ class IntervalMap:
         if end <= start:
             raise ValueError("empty insert")
         i = self._first_overlap_idx(start, end)
+        ivals = self._ivals
+        if i == len(ivals) or ivals[i].start >= end:
+            # Nothing overlapped: one positional insert, no splice
+            # machinery.  The attach stream of a bulk commit tail is
+            # ascending, so this is usually an O(1) append.
+            ivals.insert(i, Interval(start, end, value))
+            self._starts.insert(i, start)
+            self._ends.insert(i, end)
+            if self._merge:
+                self._merge_around(i, i + 1)
+            return
         new_pieces: List[Interval] = []
         # Remove every overlapped interval, keeping the uncovered flanks.
         j = i
@@ -363,6 +392,18 @@ class BufferIntervalMap(IntervalMap):
 
     def mark_attached(self, start: int, end: int) -> None:
         """Flip ``attached`` on every written sub-range of [start, end)."""
+        i = bisect.bisect_right(self._starts, start) - 1
+        if 0 <= i < len(self._ivals):
+            iv = self._ivals[i]
+            if iv.start == start and iv.end == end:
+                # Exact-cover fast path: a bulk commit tail attaches
+                # precisely the interval the write recorded, so the
+                # run snapshot and re-insert splice reduce to flipping
+                # the one slot in place.
+                self._ivals[i] = Interval(
+                    start, end, BufferSlot(iv.value.buf_start, True))
+                self._merge_window(start, end)
+                return
         runs = self.buffer_runs(start, end)  # snapshot before mutating
         for fs, fe, bs in runs:
             self.insert(fs, fe, BufferSlot(bs, True))
@@ -376,6 +417,20 @@ class BufferIntervalMap(IntervalMap):
 
     def written(self, start: int, end: int) -> bool:
         return self.covers(start, end)
+
+    def sole_run(self, start: int, end: int) -> Optional[int]:
+        """Buffer offset of [start, end) when ONE stored interval covers
+        it entirely, else None (fall back to ``covers``/``buffer_runs``).
+
+        Equivalent to the single tuple ``buffer_runs`` would return in
+        that case — one bisect instead of a query plus a per-run
+        ``lookup_interval``; the bulk read kernel's owner-read fast
+        path.
+        """
+        iv = self.sole_cover(start, end)
+        if iv is None:
+            return None
+        return iv.value.buf_start + (start - iv.start)
 
     def buffer_runs(
         self, start: int, end: int, attached: Optional[bool] = None

@@ -94,6 +94,9 @@ _KIND_CODE = {
     EventKind.MARKER: _K_MARKER,
 }
 _KIND_CODE_ID = {id(k): c for k, c in _KIND_CODE.items()}
+# Row-store ledgers encode the kind cell as ``EventKind.value`` (an
+# interned str — keeps row tuples GC-untracked); decode those directly.
+_KIND_CODE_VAL = {k.value: c for k, c in _KIND_CODE.items()}
 _KIND_BY_CODE = [
     EventKind.SSD_WRITE, EventKind.SSD_READ, EventKind.NET_TRANSFER,
     EventKind.MEM_WRITE, EventKind.MEM_READ, EventKind.PFS_WRITE,
@@ -217,8 +220,13 @@ def lower(ledger: EventLedger) -> LoweredLedger:
         raise UnsupportedLedger(
             "fault-stamped ledgers are priced by the scalar engine only "
             "in this release (retry/failover columns are follow-up work)")
-    events = ledger.events
-    n = len(events)
+    # Native columnar path: a row-store ledger transposes straight into
+    # columns — no per-Event object is ever built.  A ledger whose
+    # object view was mutated (authoritative_rows() -> None) and any
+    # foreign ledger-like object fall back to object extraction.
+    rows_fn = getattr(ledger, "authoritative_rows", None)
+    rows = rows_fn() if rows_fn is not None else None
+    n = len(rows) if rows is not None else len(ledger.events)
     if n == 0:
         return LoweredLedger(
             n=0, seq0=0, ack_window=getattr(ledger, "ack_window", 0),
@@ -229,33 +237,47 @@ def lower(ledger: EventLedger) -> LoweredLedger:
             _cost_src=(np.zeros(0, np.int8), np.zeros(0, np.int64),
                        np.zeros(0, np.int64), np.zeros(0, bool)))
 
-    # Column extraction: one list comprehension per attribute is ~3x
-    # faster than a 14-attribute ``attrgetter`` + ``zip(*...)`` (which
-    # builds and transposes one 14-tuple per event).
-    kinds = [e.kind for e in events]
-    clients = [e.client for e in events]
-    nbytes = [e.nbytes for e in events]
-    rtypes = [e.rpc_type for e in events]
-    peers = [e.peer for e in events]
-    nranges = [e.rpc_ranges for e in events]
-    shards = [e.shard for e in events]
-    flushes = [e.flush for e in events]
-    lingers = [e.linger for e in events]
-    deps = [e.deps for e in events]
-    opened = [e.opened_after for e in events]
-    last = [e.last_after for e in events]
-    forced = [e.forced_after for e in events]
-    members = [e.members for e in events]
-    seq0 = events[0].seq
-    if events[-1].seq - seq0 != n - 1:
-        raise UnsupportedLedger(
-            "event seqs are not contiguous; the vector engine lowers "
-            "record()-built ledgers only (scalar engine handles this one)")
+    if rows is not None:
+        (kinds, clients, nbytes, rtypes, peers, nranges, shards, _calls,
+         flushes, lingers, deps, opened, last, forced, members,
+         _retries, _failover) = zip(*rows)
+        # Row seqs are contiguous by construction (_seq0 + index).
+        seq0 = ledger._seq0
+    else:
+        # Column extraction: one list comprehension per attribute is ~3x
+        # faster than a 14-attribute ``attrgetter`` + ``zip(*...)``
+        # (which builds and transposes one 14-tuple per event).
+        events = ledger.events
+        kinds = [e.kind for e in events]
+        clients = [e.client for e in events]
+        nbytes = [e.nbytes for e in events]
+        rtypes = [e.rpc_type for e in events]
+        peers = [e.peer for e in events]
+        nranges = [e.rpc_ranges for e in events]
+        shards = [e.shard for e in events]
+        flushes = [e.flush for e in events]
+        lingers = [e.linger for e in events]
+        deps = [e.deps for e in events]
+        opened = [e.opened_after for e in events]
+        last = [e.last_after for e in events]
+        forced = [e.forced_after for e in events]
+        members = [e.members for e in events]
+        seq0 = events[0].seq
+        if events[-1].seq - seq0 != n - 1:
+            raise UnsupportedLedger(
+                "event seqs are not contiguous; the vector engine lowers "
+                "record()-built ledgers only (scalar engine handles this "
+                "one)")
 
-    # id()-keyed kind codes: EventKind members are singletons, and the
-    # C-level int hash beats Enum.__hash__ on the 1-per-event lookup.
-    kc = np.fromiter((_KIND_CODE_ID[id(k)] for k in kinds), np.int8,
-                     count=n)
+    if rows is not None:
+        # Native rows carry the kind cell as EventKind.value.
+        kc = np.fromiter((_KIND_CODE_VAL[v] for v in kinds), np.int8,
+                         count=n)
+    else:
+        # id()-keyed kind codes: EventKind members are singletons, and
+        # the C-level int hash beats Enum.__hash__ per-event.
+        kc = np.fromiter((_KIND_CODE_ID[id(k)] for k in kinds), np.int8,
+                         count=n)
     cl = np.fromiter(clients, np.int64, count=n)
     nb = np.fromiter(nbytes, np.int64, count=n)
     nr = np.fromiter(nranges, np.int64, count=n)
@@ -401,9 +423,13 @@ def lowered_for(ledger: EventLedger) -> LoweredLedger:
     count + last seq + registered clients); :meth:`EventLedger.clear`
     — the only non-append mutation — drops the cache explicitly.
     """
-    events = ledger.events
-    key = (len(events), len(ledger.client_node),
-           events[-1].seq if events else -1)
+    key_fn = getattr(ledger, "_cache_key", None)
+    if key_fn is not None:
+        key = key_fn()
+    else:
+        events = ledger.events
+        key = (len(events), len(ledger.client_node),
+               events[-1].seq if events else -1)
     cached = getattr(ledger, "_vec_lowered", None)
     if cached is not None and cached[0] == key:
         return cached[1]
@@ -412,10 +438,64 @@ def lowered_for(ledger: EventLedger) -> LoweredLedger:
     return L
 
 
+def _phase_groups(L: LoweredLedger, i0: int, i1: int,
+                  chains: Dict[int, List[int]]) -> List[List[int]]:
+    """Partition one phase's clients into independent scheduling groups.
+
+    Union-find over clients and the resources their events touch (device
+    planes, the PFS, shard masters — each shard's worker pool and ack
+    connection follow its master id), plus within-phase dependency and
+    ``forced_after`` edges.  Two clients share a group iff some chain of
+    shared FIFO resources or HB edges couples their schedules; disjoint
+    groups touch disjoint engine state, so replaying them one after
+    another is bitwise-identical to the interleaved single-queue
+    schedule (pinned by ``tests/test_vecreplay.py``).
+    """
+    parent: Dict[object, object] = {}
+
+    def find(x):
+        r = x
+        while True:
+            p = parent.get(r, r)
+            if p == r:
+                break
+            r = p
+        while x != r:
+            parent[x], x = r, parent[x]
+        return r
+
+    op_l, r0_l, r1_l, cl_l, blk_t = L.op, L.r0, L.r1, L.client, L.blk_t
+    seq0 = L.seq0
+    lo, hi = seq0 + i0, seq0 + i1 - 1
+    for i in range(i0, i1):
+        o = op_l[i]
+        ck = cl_l[i]
+        if o <= 3:                   # touches r0 (and r1 for net)
+            ra, rb = find(ck), find(("r", r0_l[i]))
+            if ra != rb:
+                parent[ra] = rb
+            if o == 1:
+                ra, rb = find(ck), find(("r", r1_l[i]))
+                if ra != rb:
+                    parent[ra] = rb
+        blk = blk_t[i]
+        if blk is not None:
+            for d in blk:
+                if lo <= d <= hi:
+                    ra, rb = find(ck), find(cl_l[d - seq0])
+                    if ra != rb:
+                        parent[ra] = rb
+    groups: Dict[object, List[int]] = {}
+    for ck in chains:
+        groups.setdefault(find(ck), []).append(ck)
+    return list(groups.values())
+
+
 def replay_vectorized(hw, ledger: EventLedger,
                       ack_window: Optional[int] = None,
                       honor_edges: bool = True,
-                      lowered: Optional[LoweredLedger] = None) -> List:
+                      lowered: Optional[LoweredLedger] = None,
+                      independent_queues: bool = False) -> List:
     """Price the ledger on the vectorized engine.
 
     Returns the same ``List[PhaseResult]`` as the scalar
@@ -423,6 +503,15 @@ def replay_vectorized(hw, ledger: EventLedger,
     identical ``rpc_msgs``/``rpc_count``/``bytes_by_kind``/``clients``.
     See the module docstring for what is vectorized and why the
     scheduling loop itself stays serial.
+
+    ``independent_queues=True`` replays each phase as independently
+    advancing per-group event queues: clients coupled by no shared
+    resource (shard master, device plane) and no within-phase HB edge
+    run to completion back-to-back instead of interleaving through one
+    global ``(clock, client)`` heap.  The result is bitwise-identical
+    (see :func:`_phase_groups`); the payoff is locality — each group's
+    working set stays hot instead of round-robining across every
+    client in the phase.
     """
     from repro.core.costmodel import PhaseResult  # no import cycle: lazy
 
@@ -472,7 +561,11 @@ def replay_vectorized(hw, ledger: EventLedger,
         clock = dict.fromkeys(chains, now)
         idx = dict.fromkeys(chains, 0)
         lo_seq, hi_seq = seq0 + i0, seq0 + i1 - 1
-        heap: List[Tuple[float, int]] = [(now, c) for c in chains]
+        groups = (_phase_groups(L, i0, i1, chains) if independent_queues
+                  else None)
+        gi = 0
+        heap: List[Tuple[float, int]] = ([] if groups is not None
+                                         else [(now, c) for c in chains])
         heapq.heapify(heap)
         waiters: Dict[int, List[int]] = {}
         rpc_msgs = 0
@@ -481,6 +574,14 @@ def replay_vectorized(hw, ledger: EventLedger,
         while True:
             if c is None:
                 if not heap:
+                    # Independent-queue mode: drained one group's queue;
+                    # start the next group's (disjoint state, so the
+                    # switch cannot change any timing).
+                    if groups is not None and gi < len(groups):
+                        heap = [(now, g) for g in groups[gi]]
+                        heapq.heapify(heap)
+                        gi += 1
+                        continue
                     break
                 _t, c = cpop(heap)
                 if idx[c] >= len(chains[c]):

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import ops as opstream
 from repro.core.basefs import BaseFS, EventKind
 from repro.core.consistency import FileHandle, make_fs
 
@@ -116,10 +117,25 @@ class PreloadedStore:
         per = self.total // R
         return [idx[r * per : (r + 1) * per] for r in range(R)]
 
-    def run_epoch(self, epoch: int, seed: int = 0, verify: bool = True
-                  ) -> EpochStats:
-        """Phase 2: every reader process fetches its assigned samples."""
+    def run_epoch(self, epoch: int, seed: int = 0, verify: bool = True,
+                  bulk: Optional[bool] = None) -> EpochStats:
+        """Phase 2: every reader process fetches its assigned samples.
+
+        ``bulk=True`` compiles each reader's sample stream into op
+        programs (:mod:`repro.core.ops`) submitted through the layer's
+        ``run_ops`` bulk API, chunked at handle-open boundaries so
+        every ``session_open``/``file_sync`` lands at exactly its
+        scalar position — the recorded ledger is bitwise-identical to
+        the per-op loop.  ``None`` follows the process-wide
+        ``workloads.EXEC`` default.  Verification rides on a stateful
+        ``expect_fn``: ``run_ops`` calls it exactly once per read, in
+        program order, so an iterator over the chunk's expected
+        payloads checks sample content without a per-file offset map.
+        """
         assert self._preloaded, "call preload() first"
+        if bulk is None:
+            from repro.io.workloads import EXEC
+            bulk = EXEC["mode"] == "bulk"
         self.fs.ledger.mark_phase(f"epoch_{epoch}")
         assign = self.epoch_assignment(epoch, seed)
         R = self.H * self.P
@@ -130,28 +146,55 @@ class PreloadedStore:
             host = r // self.P
             cid = READER_BASE + epoch * R + r
             handles: Dict[int, FileHandle] = {}
+            prog: Optional[opstream.OpProgram] = None
+            expected: List = []
+
+            def _flush_chunk() -> None:
+                nonlocal prog, expected
+                if prog is None or not len(prog):
+                    return
+                it = iter(expected)
+                self.layer.run_ops(
+                    prog, handles,
+                    expect_fn=((lambda off, size: next(it))
+                               if verify else None))
+                prog, expected = None, []
+
             for idx in assign[r]:
                 src = self.owner_host(idx)
                 if src not in handles:
+                    # Chunk boundary: the open (and its session_open /
+                    # file_sync) must record between the reads exactly
+                    # where the scalar loop put it.
+                    _flush_chunk()
                     fh = self.layer.open(cid, _store_path(src), node=host)
                     if self.model == "session":
                         self.layer.session_open(fh)
                     elif self.model == "mpiio":
                         self.layer.file_sync(fh)
                     handles[src] = fh
-                fh = handles[src]
                 off = (idx - src * self.n_local) * self.sample_bytes
-                self.layer.seek(fh, off)
-                data = self.layer.read(fh, self.sample_bytes)
-                if verify:
-                    assert data == self._sample_payload(idx), (
-                        f"sample {idx} corrupt under {self.model}")
+                if bulk:
+                    if prog is None:
+                        prog = opstream.OpProgram()
+                    prog.add(opstream.OP_READ, src, offset=off,
+                             size=self.sample_bytes)
+                    if verify:
+                        expected.append(self._sample_payload(idx))
+                else:
+                    fh = handles[src]
+                    self.layer.seek(fh, off)
+                    data = self.layer.read(fh, self.sample_bytes)
+                    if verify:
+                        assert data == self._sample_payload(idx), (
+                            f"sample {idx} corrupt under {self.model}")
                 stats.samples_read += 1
                 stats.bytes_read += self.sample_bytes
                 if src == host:
                     stats.local_reads += 1
                 else:
                     stats.remote_reads += 1
+            _flush_chunk()
         self.fs.drain()  # flush tail send-queue batches before counting
         stats.queries = self.fs.ledger.count(EventKind.RPC, "query") - q0
         return stats

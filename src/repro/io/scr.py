@@ -264,7 +264,7 @@ def run_scr(cfg: SCRConfig, hw: Optional[HardwareConstants] = None,
     if timings is not None:
         timings["exec_s"] = t1 - t0
         timings["replay_s"] = t2 - t1
-        timings["events"] = len(ledger.events)
+        timings["events"] = ledger.n_events
     rpcs = {
         t: ledger.count(EventKind.RPC, t)
         for t in ("attach", "query", "detach", "stat", "replay")

@@ -34,6 +34,7 @@ from functools import lru_cache
 from typing import Dict, List, Optional
 
 # TOPOLOGY/set_topology are re-exported for the benchmark drivers.
+from repro.core import ops as opstream
 from repro.core.basefs import (BaseFS, EventKind,  # noqa: F401
                                TOPOLOGY, set_topology)
 from repro.core.consistency import FileHandle, make_fs
@@ -48,12 +49,28 @@ SHARED_FILE = "/shared/workload.dat"
 #: not deployment topology — hence not part of :data:`TOPOLOGY`.
 REPLAY = {"engine": "scalar"}
 
+#: Process-wide default execution mode (``benchmarks.run --exec``):
+#: ``"bulk"`` compiles the workload inner loops into op programs
+#: (:mod:`repro.core.ops`) and submits them through the layer's
+#: ``run_ops`` bulk API; ``"scalar"`` keeps the reference op-by-op
+#: loop.  The recorded ledgers are bitwise-identical either way (the
+#: golden/hypothesis contract in ``tests/test_bulkexec.py``) — this
+#: only selects how fast execution happens, never what it records.
+EXEC = {"mode": "bulk"}
+
 
 def set_replay_engine(engine: str) -> None:
     """Set the process-wide default for ``run_workload(engine=...)``."""
     if engine not in ("scalar", "vector"):
         raise ValueError(f"unknown replay engine {engine!r}")
     REPLAY["engine"] = engine
+
+
+def set_exec_mode(mode: str) -> None:
+    """Set the process-wide default for ``run_workload(bulk=...)``."""
+    if mode not in ("bulk", "scalar"):
+        raise ValueError(f"unknown exec mode {mode!r}")
+    EXEC["mode"] = mode
 
 #: Memoize fully-expanded patterns up to this size (8 KB and the 116 KB
 #: DL sample both fit; 8 MB expansions stay uncached to bound the cache
@@ -90,6 +107,18 @@ def pattern_extent(offset: int, size: int) -> PatternExtent:
     a read that round-trips the descriptor compares in O(1) with no byte
     materialization (see :mod:`repro.core.extents`)."""
     return PatternExtent(pattern_bytes, offset, size)
+
+
+def _pattern_key(offset: int, size: int) -> tuple:
+    return ("p", id(pattern_bytes), offset, size, 0, size)
+
+
+# Symbolic-verification hint for the bulk read kernels: any payload
+# whose ``key()`` equals ``key_for(offset, size)`` is equal to
+# ``pattern_extent(offset, size)`` without constructing it (see
+# ``BaseFS._bulk_read_run_vec``).  Only attach this to PURE expectation
+# callbacks — the kernel skips the call entirely on a key hit.
+pattern_extent.key_for = _pattern_key
 
 
 @dataclass(frozen=True)
@@ -274,6 +303,102 @@ def _read_offsets(cfg: WorkloadConfig, rank: int) -> List[int]:
     raise ValueError(cfg.read_pattern)
 
 
+def _write_offset_cols(cfg: WorkloadConfig) -> list:
+    """Round-major offset columns for the write phase.
+
+    The regular patterns are arithmetic progressions per round-robin
+    round — ``range`` objects extend into the program columns at C
+    speed, skipping the per-rank offset lists entirely.  Irregular
+    patterns fall back to the per-rank generator transposed."""
+    W, s, m = cfg.writers, cfg.s, cfg.m_w
+    if cfg.write_pattern == "contig":
+        # offset(rank, round j) = rank*m*s + j*s
+        return [range(j * s, j * s + W * m * s, m * s) for j in range(m)]
+    if cfg.write_pattern == "strided":
+        # offset(rank, round j) = (j*W + rank)*s
+        return [range(j * W * s, (j * W + W) * s, s) for j in range(m)]
+    offsets = [_write_offsets(cfg, r) for r in range(W)]
+    return [[offsets[r][j] for r in range(W)] for j in range(m)]
+
+
+def _read_offset_cols(cfg: WorkloadConfig) -> list:
+    """Round-major offset columns for the read phase (see above); the
+    random pattern slices the scaled block deal per round."""
+    R, s, m = cfg.readers, cfg.s, cfg.m_r
+    if cfg.read_pattern == "contig":
+        return [range(j * s, j * s + R * m * s, m * s) for j in range(m)]
+    if cfg.read_pattern == "strided":
+        return [range(j * R * s, (j * R + R) * s, s) for j in range(m)]
+    if cfg.read_pattern == "random":
+        blocks = _random_deal(cfg.writers * cfg.m_w, cfg.seed)
+        if len(blocks) < R * m:
+            raise IndexError("read deal smaller than readers x m_r")
+        ds = [b * s for b in blocks]
+        # rank r's j-th read is deal[r*m + j]: round j is every m-th
+        # scaled block starting at j, one per reader.
+        return [ds[j:j + R * m:m] for j in range(m)]
+    offsets = [_read_offsets(cfg, r) for r in range(R)]
+    return [[offsets[r][j] for r in range(R)] for j in range(m)]
+
+
+#: Write-phase tail sync op per model (posix attaches on every write —
+#: no tail op).  These ride in the compiled program as control opcodes,
+#: so they execute through the layer's own sync methods at exactly the
+#: position the scalar loop runs them.
+_WRITE_SYNC_OP = {"commit": opstream.OP_COMMIT,
+                  "session": opstream.OP_SESSION_CLOSE,
+                  "mpiio": opstream.OP_FILE_SYNC}
+
+
+def compile_write_program(cfg: WorkloadConfig) -> opstream.OpProgram:
+    """Compile the write phase's inner loop into a columnar op program:
+    ``m_w`` round-robin rounds of per-rank writes, then the per-rank
+    consistency sync op (commit / session_close / file_sync).  Client
+    ids are writer ranks — the keys of the writer handle map."""
+    prog = opstream.OpProgram(paths=(SHARED_FILE,))
+    W, s = cfg.writers, cfg.s
+    ranks = range(W)
+    nw = W * cfg.m_w
+    prog.op.extend([opstream.OP_WRITE] * nw)
+    for col in _write_offset_cols(cfg):
+        prog.client.extend(ranks)
+        prog.offset.extend(col)
+    prog.size.extend([s] * nw)
+    prog.file.extend([0] * nw)
+    sync = _WRITE_SYNC_OP.get(cfg.model)
+    if sync is not None:
+        prog.op.extend([sync] * W)
+        prog.client.extend(ranks)
+        prog.offset.extend([0] * W)
+        prog.size.extend([0] * W)
+        prog.file.extend([0] * W)
+    return prog
+
+
+def compile_read_program(cfg: WorkloadConfig) -> opstream.OpProgram:
+    """Compile the read phase's inner loop: ``m_r`` round-robin rounds
+    of per-reader reads, then the session-model closes.  Client ids are
+    reader indices ``0..readers`` — the keys of the reader handle map
+    (NOT BaseFS client ids, which are offset by ``cfg.writers``)."""
+    prog = opstream.OpProgram(paths=(SHARED_FILE,))
+    R, s = cfg.readers, cfg.s
+    readers = range(R)
+    nr = R * cfg.m_r
+    prog.op.extend([opstream.OP_READ] * nr)
+    for col in _read_offset_cols(cfg):
+        prog.client.extend(readers)
+        prog.offset.extend(col)
+    prog.size.extend([s] * nr)
+    prog.file.extend([0] * nr)
+    if cfg.model == "session":
+        prog.op.extend([opstream.OP_SESSION_CLOSE] * R)
+        prog.client.extend(readers)
+        prog.offset.extend([0] * R)
+        prog.size.extend([0] * R)
+        prog.file.extend([0] * R)
+    return prog
+
+
 def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  hw: Optional[HardwareConstants] = None,
                  verify: bool = True, shards: Optional[int] = None,
@@ -285,7 +410,8 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                  timings: Optional[Dict[str, float]] = None,
                  tracer=None,
                  engine: Optional[str] = None,
-                 faults=None) -> WorkloadResult:
+                 faults=None,
+                 bulk: Optional[bool] = None) -> WorkloadResult:
     """Execute ``cfg`` on a fresh BaseFS; return DES-priced phase results.
 
     The file system is purged before each run (paper §6.1): a fresh BaseFS
@@ -314,8 +440,17 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
     crash/failover, slow shards — into the fresh BaseFS; ``None`` keeps the
     TOPOLOGY default (normally fault-free).  Ignored when ``fs`` is
     supplied (the caller's BaseFS already fixed its fault plane).
+
+    ``bulk`` selects the execution mode: ``True`` compiles the phase
+    inner loops into op programs (:func:`compile_write_program` /
+    :func:`compile_read_program`) and submits them through the layer's
+    ``run_ops`` bulk API; ``False`` runs the reference op-by-op loop.
+    ``None`` uses the process-wide :data:`EXEC` default.  The recorded
+    ledger — and therefore every DES result — is bitwise-identical
+    either way.
     """
     t0 = _time.perf_counter()
+    bulk_mode = (EXEC["mode"] == "bulk") if bulk is None else bulk
     if fs is None:
         fs = BaseFS(num_shards=shards, batch=batch, linger=linger,
                     adaptive=adaptive, materialize=materialize,
@@ -343,22 +478,26 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
         # Interleave write ops round-robin over ranks: the DES reconstructs
         # true concurrency from per-client chains; round-robin issue also
         # exercises the server under the paper's concurrent arrival order.
-        offsets = {r: _write_offsets(cfg, r) for r in range(cfg.writers)}
-        for j in range(cfg.m_w):
+        if bulk_mode:
+            layer.run_ops(compile_write_program(cfg), handles,
+                          payload_fn=pattern_extent)
+        else:
+            offsets = {r: _write_offsets(cfg, r) for r in range(cfg.writers)}
+            for j in range(cfg.m_w):
+                for rank in range(cfg.writers):
+                    fh = handles[rank]
+                    off = offsets[rank][j]
+                    layer.seek(fh, off)
+                    layer.write(fh, pattern_extent(off, cfg.s))
             for rank in range(cfg.writers):
                 fh = handles[rank]
-                off = offsets[rank][j]
-                layer.seek(fh, off)
-                layer.write(fh, pattern_extent(off, cfg.s))
-        for rank in range(cfg.writers):
-            fh = handles[rank]
-            if cfg.model == "commit":
-                layer.commit(fh)
-            elif cfg.model == "session":
-                layer.session_close(fh)
-            elif cfg.model == "mpiio":
-                layer.file_sync(fh)
-            # posix: writes already attached.
+                if cfg.model == "commit":
+                    layer.commit(fh)
+                elif cfg.model == "session":
+                    layer.session_close(fh)
+                elif cfg.model == "mpiio":
+                    layer.file_sync(fh)
+                # posix: writes already attached.
         if cfg.pfs_drain:
             # Burst-buffer drain to the PFS INSIDE the write phase (no
             # barrier): a posix writer's tail attach batch stays open
@@ -382,23 +521,29 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
                 layer.session_open(fh)
             elif cfg.model == "mpiio":
                 layer.file_sync(fh)
-        roffsets = {r: _read_offsets(cfg, r) for r in range(cfg.readers)}
-        for j in range(cfg.m_r):
+        if bulk_mode:
+            verified = layer.run_ops(
+                compile_read_program(cfg), rhandles,
+                expect_fn=pattern_extent if verify else None)
+        else:
+            roffsets = {r: _read_offsets(cfg, r) for r in range(cfg.readers)}
+            for j in range(cfg.m_r):
+                for r in range(cfg.readers):
+                    fh = rhandles[r]
+                    off = roffsets[r][j]
+                    layer.seek(fh, off)
+                    data = layer.read(fh, cfg.s)
+                    if verify:
+                        # Symbolic on the extent plane (descriptor
+                        # compare, no materialization); byte compare in
+                        # byte mode.
+                        assert data == pattern_extent(off, cfg.s), (
+                            f"{cfg.name}: read mismatch at offset {off}"
+                        )
+                        verified += 1
             for r in range(cfg.readers):
-                fh = rhandles[r]
-                off = roffsets[r][j]
-                layer.seek(fh, off)
-                data = layer.read(fh, cfg.s)
-                if verify:
-                    # Symbolic on the extent plane (descriptor compare,
-                    # no materialization); byte compare in byte mode.
-                    assert data == pattern_extent(off, cfg.s), (
-                        f"{cfg.name}: read mismatch at offset {off}"
-                    )
-                    verified += 1
-        for r in range(cfg.readers):
-            if cfg.model == "session":
-                layer.session_close(rhandles[r])
+                if cfg.model == "session":
+                    layer.session_close(rhandles[r])
 
     fs.drain()  # flush tail send-queue batches so the DES prices them
     t1 = _time.perf_counter()
@@ -407,7 +552,12 @@ def run_workload(cfg: WorkloadConfig, fs: Optional[BaseFS] = None,
     if timings is not None:
         timings["exec_s"] = t1 - t0
         timings["replay_s"] = t2 - t1
-        timings["events"] = len(ledger.events)
+        timings["events"] = ledger.n_events
+        timings["exec_mode"] = "bulk" if bulk_mode else "scalar"
+        timings["replay_engine"] = getattr(phases, "engine", "scalar")
+        fb = getattr(phases, "fallback_reason", None)
+        if fb is not None:
+            timings["replay_fallback_reason"] = fb
     rpc_counts = {
         t: ledger.count(EventKind.RPC, t)
         for t in ("attach", "query", "detach", "stat", "migrate")

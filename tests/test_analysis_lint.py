@@ -98,6 +98,31 @@ def test_ana004_faultless_calls_pass():
     assert lint_source(src, "src/repro/io/foo.py") == []
 
 
+# ----------------------------------------------------------------- ANA005
+def test_ana005_flags_direct_bulk_kernel_calls():
+    src = ("def f(fs, batcher, prog):\n"
+           "    fs.bulk_write_run({}, prog.client, prog.offset,\n"
+           "                      prog.size, 0, 4, None)\n"
+           "    fs.bulk_read_run({}, prog.client, prog.offset,\n"
+           "                     prog.size, 0, 4)\n"
+           "    batcher.submit_run('attach', 0, '/f', 0, [(1, 24)])\n")
+    v = lint_source(src, "benchmarks/foo.py")
+    assert [x.rule for x in v] == ["ANA005"] * 3
+    assert "run_ops" in v[0].message
+    # The layer API and BaseFS itself are the legal entry points.
+    assert lint_source(src, "src/repro/core/consistency.py") == []
+    assert lint_source(src, "src/repro/core/basefs.py") == []
+
+
+def test_ana005_ignores_other_calls_and_tests():
+    src = "def f(fs):\n    fs.run_ops(None, None)\n"
+    assert lint_source(src, "src/repro/io/foo.py") == []
+    # Tests are outside SCAN_DIRS: run_lint never visits them, so
+    # hand-driving a kernel in a unit test stays legal.
+    from repro.analysis.lint import SCAN_DIRS
+    assert not any(d.startswith("tests") for d in SCAN_DIRS)
+
+
 # ------------------------------------------------------------------- misc
 def test_violation_formatting():
     v = lint_source("bfs_query('/f')\n", "examples/demo.py")[0]

@@ -1,0 +1,320 @@
+"""Bulk op-program execution: golden bulk ≡ scalar, chunking, kernels.
+
+PR-10 tentpole coverage (contract spec: ``docs/ARCHITECTURE.md``
+execution plane + ``docs/REPLAY.md`` columnar-ledger contract):
+
+* **golden bulk ≡ scalar** — running a workload through the compiled
+  op-program path (``run_ops`` → bulk kernels) records a ledger
+  tuple-for-tuple identical to the scalar op-by-op loop: events,
+  ``last_seq`` anchors, and replayed ``PhaseResult``\\ s (durations
+  compared bitwise via ``float.hex``) across the four consistency
+  models × topology (shards, batching, linger, ack windows, adaptive
+  routing) × seeded fault schedules;
+* **chunk slicing** — submitting ``prog.slice(0, k)`` then
+  ``prog.slice(k, n)`` (any chunking) through ``run_ops`` is
+  bitwise-identical to one whole-program submission (seeded random
+  chunkings + a hypothesis property when available);
+* **``submit_run``** — the batcher's array path ≡ the same sequence of
+  scalar ``submit`` calls, including size-cap flush boundaries and
+  member virtual-clock anchors;
+* **vectorized read kernel** — engages at the ≥256-read threshold on
+  conforming runs, stays out when numpy is gated off, and its
+  all-or-nothing fallback (multi-stripe reads) leaves the scalar
+  kernel's ledger untouched — fallback is pure;
+* **``independent_queues``** — the per-group replay mode is
+  bitwise-identical to the single-queue schedule;
+* **``ReplayResult`` observability** — ``engine`` reports the path
+  that actually ran and ``fallback_reason`` surfaces vector→scalar
+  substitutions (fault-stamped ledgers) instead of hiding them.
+"""
+
+import random
+
+import pytest
+
+from repro.core import basefs as basefs_mod
+from repro.core import ops as opstream
+from repro.core.basefs import BaseFS, EventKind
+from repro.core.consistency import make_fs
+from repro.core.costmodel import CostModel
+from repro.core.faults import FaultSchedule
+from repro.core.vecreplay import replay_vectorized
+from repro.io import workloads as W
+
+KB = 1024
+MODELS = ("posix", "commit", "session", "mpiio")
+
+
+# --------------------------------------------------------------- helpers
+def _ledger_fp(led):
+    """Tuple-for-tuple ledger fingerprint: events + clock anchors."""
+    ev = tuple(tuple(sorted(e.__dict__.items())) for e in led.events)
+    return ev, tuple(sorted(led.last_seq.items()))
+
+
+def _replay_fp(res):
+    """Bitwise phase-result fingerprint (duration via ``float.hex``)."""
+    out = []
+    for ph in res.phases:
+        out.append((ph.name, ph.duration.hex(), ph.rpc_count, ph.rpc_msgs,
+                    tuple(sorted((k.value, v)
+                                 for k, v in ph.bytes_by_kind.items()))))
+    return tuple(out)
+
+
+def _run(cfg, bulk, shards=4, batch=None, linger=None, adaptive=None,
+         faults=None, ack_window=None):
+    fs = BaseFS(num_shards=shards, batch=batch, linger=linger,
+                adaptive=adaptive, faults=faults, ack_window=ack_window)
+    res = W.run_workload(cfg, fs=fs, bulk=bulk)
+    return _ledger_fp(fs.ledger) + (_replay_fp(res),)
+
+
+# ---------------------------------------------------- golden bulk ≡ scalar
+@pytest.mark.parametrize("model", MODELS)
+def test_bulk_matches_scalar(model):
+    cfg = W.rn_r(6, 4 * KB, model, p=4, m=3)
+    assert _run(cfg, True) == _run(cfg, False)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_bulk_matches_scalar_batched_linger(model):
+    cfg = W.ckpt_w(6, 4 * KB, model, p=4, m=3)
+    a = _run(cfg, True, batch=3, linger=0.5)
+    b = _run(cfg, False, batch=3, linger=0.5)
+    assert a == b
+
+
+def test_bulk_matches_scalar_single_shard_and_adaptive():
+    cfg = W.rn_r_hot(6, 4 * KB, "commit", p=4, m=3)
+    assert _run(cfg, True, shards=1) == _run(cfg, False, shards=1)
+    assert _run(cfg, True, adaptive=True) == _run(cfg, False,
+                                                  adaptive=True)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_bulk_matches_scalar_ack_window(model):
+    # ack_window > 0 changes what the batcher records (fire-and-forget
+    # flushes, fence-on-empty-queue RPC_FENCE_MARKERs) and the replay
+    # default, so it is its own equality dimension.
+    cfg = W.ckpt_w(6, 4 * KB, model, p=4, m=3)
+    a = _run(cfg, True, batch=3, linger=0.5, ack_window=4)
+    b = _run(cfg, False, batch=3, linger=0.5, ack_window=4)
+    assert a == b
+
+
+@pytest.mark.parametrize("model", ("commit", "session"))
+def test_bulk_matches_scalar_under_faults(model):
+    cfg = W.rn_r(6, 4 * KB, model, p=4, m=3)
+    fl = dict(seed=3, drop_rate=0.1, max_retries=4,
+              crash_shards=((0, 2),), slow_shards=((1, 3.0),))
+    a = _run(cfg, True, faults=FaultSchedule(**fl))
+    b = _run(cfg, False, faults=FaultSchedule(**fl))
+    assert a == b
+
+
+# --------------------------------------------------------- chunk slicing
+def _interleaved_program(nclients, rounds, s, sync=opstream.OP_COMMIT,
+                         sync_rounds=1):
+    """Writes round-robin, per-client sync ops, cross-client reads.
+
+    ``sync_rounds=2`` is the MPI-IO sync-barrier-sync idiom: the first
+    round publishes every writer's data, the second acquires it into
+    each reader's view before the cross-client reads.
+    """
+    prog = opstream.OpProgram(paths=("/shared",))
+    for j in range(rounds):
+        for c in range(nclients):
+            prog.add(opstream.OP_WRITE, c,
+                     offset=(j * nclients + c) * s, size=s)
+    for _ in range(sync_rounds):
+        for c in range(nclients):
+            prog.add(sync, c)
+    for j in range(rounds):
+        for c in range(nclients):
+            # Read a block some OTHER client wrote.
+            prog.add(opstream.OP_READ, c,
+                     offset=(j * nclients + (c + 1) % nclients) * s,
+                     size=s)
+    return prog.check()
+
+
+def _run_chunked(model, prog, cuts):
+    fs = BaseFS(num_shards=4)
+    layer = make_fs(model, fs)
+    handles = {c: layer.open(c, "/shared", node=c)
+               for c in set(prog.client)}
+    bounds = [0] + sorted(cuts) + [len(prog)]
+    for a, b in zip(bounds, bounds[1:]):
+        layer.run_ops(prog.slice(a, b), handles,
+                      payload_fn=W.pattern_extent,
+                      expect_fn=W.pattern_extent)
+    return _ledger_fp(fs.ledger)
+
+
+@pytest.mark.parametrize("model", ("commit", "mpiio"))
+def test_chunked_submission_is_bitwise_identical(model):
+    if model == "mpiio":
+        prog = _interleaved_program(4, 6, 4 * KB,
+                                    sync=opstream.OP_FILE_SYNC,
+                                    sync_rounds=2)
+    else:
+        prog = _interleaved_program(4, 6, 4 * KB)
+    whole = _run_chunked(model, prog, [])
+    rng = random.Random(2026)
+    for _ in range(6):
+        k = rng.randint(1, 5)
+        cuts = rng.sample(range(1, len(prog)), k)
+        assert _run_chunked(model, prog, cuts) == whole, cuts
+
+
+def test_chunked_submission_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    prog = _interleaved_program(3, 4, 4 * KB)
+    whole = _run_chunked("commit", prog, [])
+
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(st.sets(st.integers(1, len(prog) - 1), max_size=6))
+    def prop(cuts):
+        assert _run_chunked("commit", prog, sorted(cuts)) == whole
+
+    prop()
+
+
+def test_opprogram_check_rejects_ragged_and_unknown():
+    prog = opstream.OpProgram.from_ops(
+        [(opstream.OP_WRITE, 0, 0, 4)], paths=("/f",))
+    assert len(prog.check()) == 1
+    prog.offset.append(8)
+    with pytest.raises(ValueError):
+        prog.check()
+    bad = opstream.OpProgram.from_ops([(99, 0, 0, 0)])
+    with pytest.raises(ValueError):
+        bad.check()
+
+
+# ------------------------------------------------------------ submit_run
+def _batcher_fp(use_run, members, interleave_at=None):
+    fs = BaseFS(num_shards=2, batch=3, linger=0.5)
+    c = fs.client(0, 0)
+    b = fs.server.batcher
+    if use_run:
+        if interleave_at is None:
+            b.submit_run("attach", 0, "/f", 0, list(members))
+        else:
+            b.submit_run("attach", 0, "/f", 0,
+                         list(members[:interleave_at]))
+            fs.ledger.record(EventKind.SSD_WRITE, 0, 64)
+            b.submit_run("attach", 0, "/f", 0,
+                         list(members[interleave_at:]))
+    else:
+        for i, (nr, nb) in enumerate(members):
+            if i == interleave_at:
+                fs.ledger.record(EventKind.SSD_WRITE, 0, 64)
+            b.submit("attach", 0, "/f", 0, nr, nb)
+    fs.rpc_fence(c)
+    return _ledger_fp(fs.ledger)
+
+
+def test_submit_run_matches_scalar_submits():
+    members = [(1, 24), (2, 48), (1, 24), (3, 72), (1, 24), (1, 24),
+               (2, 48)]
+    assert _batcher_fp(True, members) == _batcher_fp(False, members)
+    # An intervening same-client ledger event moves the member anchors;
+    # a run split at that point must anchor identically.
+    assert (_batcher_fp(True, members, interleave_at=3)
+            == _batcher_fp(False, members, interleave_at=3))
+
+
+# ------------------------------------------- vectorized read kernel gate
+def _spy_vec(monkeypatch):
+    calls = []
+    orig = BaseFS._bulk_read_run_vec
+
+    def spy(self, *a, **kw):
+        r = orig(self, *a, **kw)
+        calls.append(r)
+        return r
+
+    monkeypatch.setattr(BaseFS, "_bulk_read_run_vec", spy)
+    return calls
+
+
+def test_vec_read_kernel_engages_at_scale(monkeypatch):
+    pytest.importorskip("numpy")
+    calls = _spy_vec(monkeypatch)
+    # rn_r splits nodes half-and-half: 44 nodes x 4p -> 88 readers,
+    # 88 x 3 rounds = 264 reads in one run, over the 256 threshold.
+    cfg = W.rn_r(44, 4 * KB, "commit", p=4, m=3)
+    bulk = _run(cfg, True)
+    assert calls and calls[-1] is not None  # kernel resolved the run
+    assert bulk == _run(cfg, False)
+
+
+def test_vec_read_kernel_fallback_is_pure(monkeypatch):
+    pytest.importorskip("numpy")
+    calls = _spy_vec(monkeypatch)
+    # 128 KB reads cross the 64 KB stripe on a 4-shard deployment:
+    # every read is multi-stripe, the kernel bails before committing
+    # anything, and the scalar kernel reruns from unchanged state.
+    cfg = W.rn_r(44, 128 * KB, "commit", p=4, m=3)
+    bulk = _run(cfg, True)
+    assert calls and all(r is None for r in calls)
+    assert bulk == _run(cfg, False)
+
+
+def test_vec_read_kernel_gated_off_without_numpy(monkeypatch):
+    calls = _spy_vec(monkeypatch)
+    monkeypatch.setattr(basefs_mod, "_np", None)
+    cfg = W.rn_r(44, 4 * KB, "commit", p=4, m=3)
+    bulk = _run(cfg, True)
+    assert not calls  # gate never enters the kernel
+    assert bulk == _run(cfg, False)
+
+
+# ------------------------------------------------- replay-mode contracts
+def _phase_bitwise(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x.name == y.name
+        assert x.duration.hex() == y.duration.hex()
+        assert x.rpc_msgs == y.rpc_msgs
+        assert x.rpc_count == y.rpc_count
+        assert x.bytes_by_kind == y.bytes_by_kind
+
+
+def test_independent_queues_bitwise_identical():
+    pytest.importorskip("numpy")
+    cfg = W.rn_r(6, 4 * KB, "commit", p=4, m=3)
+    fs = BaseFS(num_shards=4)
+    W.run_workload(cfg, fs=fs, bulk=True)
+    cm = CostModel()
+    _phase_bitwise(
+        replay_vectorized(cm.hw, fs.ledger),
+        replay_vectorized(cm.hw, fs.ledger, independent_queues=True))
+
+
+def test_replayresult_reports_engine_and_fallback():
+    cfg = W.rn_r(4, 4 * KB, "commit", p=2, m=2)
+    fs = BaseFS(num_shards=2)
+    W.run_workload(cfg, fs=fs, bulk=True)
+    cm = CostModel()
+    scalar = cm.replay(fs.ledger)
+    assert scalar.engine == "scalar" and scalar.fallback_reason is None
+    vector = cm.replay(fs.ledger, engine="vector")
+    assert vector.engine == "vector" and vector.fallback_reason is None
+    _phase_bitwise(scalar, vector)
+    with pytest.raises(ValueError):
+        cm.replay(fs.ledger, engine="warp")
+
+
+def test_replayresult_surfaces_vector_fallback_on_faults():
+    cfg = W.rn_r(4, 4 * KB, "commit", p=2, m=2)
+    fs = BaseFS(num_shards=2,
+                faults=FaultSchedule(seed=1, drop_rate=0.2))
+    W.run_workload(cfg, fs=fs, bulk=True)
+    res = CostModel().replay(fs.ledger, engine="vector")
+    assert res.engine == "scalar"
+    assert res.fallback_reason is not None
+    assert "fault" in res.fallback_reason
